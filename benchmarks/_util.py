@@ -1,0 +1,29 @@
+"""Shared benchmark helpers: timing + the run.py CSV contract."""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+
+ROWS: list[tuple] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def time_it(fn, *args, repeat: int = 3, warmup: int = 1, **kw) -> float:
+    for _ in range(warmup):
+        fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        fn(*args, **kw)
+    return (time.perf_counter() - t0) / repeat
+
+
+@contextmanager
+def timed():
+    box = {}
+    t0 = time.perf_counter()
+    yield box
+    box["s"] = time.perf_counter() - t0

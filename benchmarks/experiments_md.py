@@ -1,0 +1,107 @@
+"""Generate the §Dry-run and §Roofline sections of EXPERIMENTS.md from the
+dryrun_out/*.json artifacts (run after `dryrun --all` on both meshes)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def _fmt_bytes(b):
+    return f"{b / 2 ** 30:.2f}"
+
+
+def load_all(out_dir="dryrun_out"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        r["_file"] = os.path.basename(path)
+        rows.append(r)
+    return rows
+
+
+def is_baseline(r):
+    stem = r["_file"][: -len(".json")]
+    return stem.endswith(r["mesh"].replace("x", "-"))
+
+
+def dryrun_section(rows):
+    out = ["## §Dry-run", "",
+           "Every assigned (arch × shape) cell lowered + compiled with "
+           "`jax.jit(...).lower().compile()` on BOTH production meshes "
+           "(16×16 = 256 chips; 2×16×16 = 512 chips, `pod` = outer DP "
+           "axis). Columns from `compiled.memory_analysis()` and the "
+           "scan-aware HLO analysis (collective payloads multiplied "
+           "through loop trip counts).", "",
+           "| arch | shape | mesh | args GiB/dev | temp GiB/dev | peak "
+           "GiB/dev | HLO GFLOP/dev | wire GB/dev | top collectives |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
+        m = r["memory"]
+        colls = {k: v for k, v in r["collectives"].items()
+                 if isinstance(v, dict) and v.get("count")}
+        top = sorted(colls.items(), key=lambda kv: -kv[1]["wire_bytes"])[:2]
+        tops = ", ".join(f"{k}×{v['count']}" for k, v in top) or "—"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {_fmt_bytes(m['argument_bytes'])} "
+            f"| {_fmt_bytes(m['temp_bytes'])} "
+            f"| {_fmt_bytes(m['peak_bytes'])} "
+            f"| {r['hlo_flops_per_device'] / 1e9:.0f} "
+            f"| {r.get('total_wire_bytes', 0) / 1e9:.1f} "
+            f"| {tops} |")
+    return "\n".join(out)
+
+
+def roofline_section(rows):
+    out = ["## §Roofline (single-pod 16×16, 256 × TPU v5e)", "",
+           "Terms: compute = HLO_FLOPs/dev ÷ 197 TF/s; memory = HBM "
+           "traffic/dev ÷ 819 GB/s; collective = ring wire bytes/dev ÷ "
+           "50 GB/s. `useful` = MODEL_FLOPS (6·N·D train / 2·N·D serve, "
+           "N = active params) ÷ HLO_FLOPs.", "",
+           "| arch | shape | compute s | memory s | collective s | "
+           "dominant | useful | one-line diagnosis |",
+           "|---|---|---|---|---|---|---|---|"]
+    notes = {
+        ("dense", "train"): "FSDP param all-gathers per microbatch drive "
+        "the collective term — hillclimb H2",
+        ("moe", "train"): "EP psum + FSDP gathers; dispatch is sort-based "
+        "so compute stays near model FLOPs",
+        ("moe", "prefill"): "expert streaming: every expert's weights are "
+        "read per token block — memory-bound",
+        ("dense", "prefill"): "logit + attention traffic; flash custom-VJP "
+        "keeps memory O(S)",
+        ("dense", "decode"): "KV-cache streaming bound (classic decode)",
+        ("moe", "decode"): "KV cache + expert weight streaming",
+        ("ssm", "train"): "SSD intra-chunk decay tensors dominate HBM "
+        "traffic",
+        ("ssm", "prefill"): "state-passing collectives on seq sharding",
+        ("ssm", "decode"): "O(1) state update; tiny",
+        ("hybrid", "train"): "mamba traffic + shared-attn collectives",
+    }
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        roof = r["roofline_s"]
+        fam_kind = (r.get("family") or "", r["kind"])
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {roof['compute']:.3f} "
+            f"| {roof['memory']:.3f} | {roof['collective']:.3f} "
+            f"| **{r['dominant']}** | {r['useful_flops_ratio']:.2f} "
+            f"| {notes.get(fam_kind, '')} |")
+    return "\n".join(out)
+
+
+def main():
+    rows = [r for r in load_all() if is_baseline(r)]
+    single = [r for r in rows if r["mesh"] == "16x16"]
+    multi = [r for r in rows if r["mesh"] == "2x16x16"]
+    print(dryrun_section(rows))
+    print()
+    print(roofline_section(single))
+    print(f"\nCells compiled: {len(single)} single-pod, {len(multi)} "
+          f"multi-pod (of 32 runnable; 8 long_500k cells skipped per "
+          f"assignment for pure full-attention archs).")
+
+
+if __name__ == "__main__":
+    main()

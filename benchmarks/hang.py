@@ -1,0 +1,45 @@
+"""Fig 10 + Table 2: communication-hang localization latency.
+
+Intra-kernel inspecting is O(1) in cluster size (paper: 29.4-309.2 s,
+constant); the NCCL-test baseline grows with #groups (paper: >= 30 min at
+thousand-GPU scale).  We (a) verify diagnosis CORRECTNESS on the simulated
+ring at each scale, and (b) report the wall-clock cost models side by side.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks._util import emit
+from repro.core.inspecting import (diagnose_ring, inspect_cost_model,
+                                   probe_search_cost)
+from repro.core.timeline import ClusterSimulator, Injection, SimOp
+
+SCALES = [16, 64, 256, 1024, 2048]
+
+
+def main():
+    for n in SCALES:
+        fault = (7 * n) // 16
+        prog = [SimOp("allreduce[0]", "comm", 1e-3, bytes=1 << 20)]
+        sim = ClusterSimulator(n, prog, injections=[
+            Injection(kind="hang", ranks=(fault,), at_step=0)])
+        t0 = time.perf_counter()
+        sim.run(1)
+        d = diagnose_ring(sim.hang.ring_progress)
+        engine_us = (time.perf_counter() - t0) * 1e6
+        assert fault in d.machines, (n, fault, d)
+        flare_s = inspect_cost_model(n, "SIMPLE", inter_server=True)
+        probe_s = probe_search_cost(n)
+        emit(f"hang/{n}gpus", engine_us,
+             f"flare_wallclock_s={flare_s:.0f};probe_baseline_s={probe_s:.0f};"
+             f"correct=True")
+    # protocol sweep at fixed scale (paper Fig 10 bars)
+    for proto in ("SIMPLE", "LL128", "LL"):
+        for inter in (False, True):
+            c = inspect_cost_model(1024, proto, inter)
+            emit(f"hang/protocol_{proto}_{'inter' if inter else 'intra'}",
+                 c * 1e6, f"s={c:.1f};paper_band=29.4-309.2")
+
+
+if __name__ == "__main__":
+    main()

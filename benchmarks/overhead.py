@@ -1,0 +1,42 @@
+"""Fig 8: FLARE runtime latency overhead across backends/models.
+
+The paper measures 0.43% mean overhead on 1024 H800s (LLM backends) and
+1.02% for TorchRec.  Here: reduced configs of three backend families
+(dense / MoE / SSM), trained with and without the daemon attached, on CPU.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks._util import emit
+from repro.configs import get_reduced
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.train import RunConfig, Trainer
+
+MODELS = [("llama3.2-1b", "dense"), ("dbrx-132b", "moe"),
+          ("mamba2-780m", "ssm")]
+
+
+def _steps_per_s(arch: str, flare: bool, steps: int = 14) -> float:
+    cfg = get_reduced(arch)
+    run = RunConfig(model=cfg, global_batch=4, seq_len=64, steps=steps,
+                    peak_lr=1e-3, opt=AdamWConfig(lr=1e-3), flare=flare)
+    hist = Trainer(run).train()
+    times = [h["step_time_s"] for h in hist[3:]]  # skip compile steps
+    return float(np.median(times))
+
+
+def main() -> list[tuple]:
+    out = []
+    for arch, family in MODELS:
+        base = _steps_per_s(arch, flare=False)
+        traced = _steps_per_s(arch, flare=True)
+        overhead = (traced - base) / base * 100.0
+        emit(f"overhead/{family}", traced * 1e6,
+             f"flare_overhead_pct={overhead:.2f};paper=0.43")
+        out.append((family, overhead))
+    return out
+
+
+if __name__ == "__main__":
+    main()

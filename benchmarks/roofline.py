@@ -1,0 +1,68 @@
+"""§Roofline: aggregate the dry-run JSONs into the per-(arch x shape) table.
+
+Reads dryrun_out/*.json produced by repro.launch.dryrun; emits a markdown
+table + CSV rows with the three roofline terms, the dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPS, and peak bytes/device.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks._util import emit
+
+HEADER = ("| arch | shape | mesh | peak GiB/dev | compute s | memory s | "
+          "collective s | dominant | useful ratio |")
+SEP = "|" + "---|" * 9
+
+
+def load(out_dir: str = "dryrun_out", mesh: str | None = "16-16",
+         tag: str | None = None) -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        base = os.path.basename(path)
+        if mesh and f"_{mesh}" not in base:
+            continue
+        is_tagged = base.count("_") > 2 + base.count("x")  # crude
+        with open(path) as f:
+            r = json.load(f)
+        r["_file"] = base
+        if tag is None and not base.replace(".json", "").endswith(
+                r["mesh"].replace("x", "-")):
+            continue  # skip tagged (perf-iteration) runs in the base table
+        if tag is not None and not base.replace(".json", "").endswith(tag):
+            continue
+        rows.append(r)
+    return rows
+
+
+def table(rows: list[dict]) -> str:
+    out = [HEADER, SEP]
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        roof = r["roofline_s"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['memory']['peak_bytes'] / 2 ** 30:.2f} "
+            f"| {roof['compute']:.3f} | {roof['memory']:.3f} "
+            f"| {roof['collective']:.3f} | {r['dominant']} "
+            f"| {r['useful_flops_ratio']:.2f} |")
+    return "\n".join(out)
+
+
+def main(out_dir: str = "dryrun_out"):
+    rows = load(out_dir)
+    if not rows:
+        emit("roofline/missing", 0.0, "run repro.launch.dryrun --all first")
+        return
+    print(table(rows))
+    for r in rows:
+        roof = r["roofline_s"]
+        dom = max(roof.values())
+        emit(f"roofline/{r['arch']}/{r['shape']}", dom * 1e6,
+             f"dominant={r['dominant']};useful={r['useful_flops_ratio']:.2f};"
+             f"peakGiB={r['memory']['peak_bytes'] / 2 ** 30:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/_util.emit).
+  Fig 8   -> overhead        Fig 9  -> logsize
+  Fig 10  -> hang            Fig 11 -> issue_dist
+  Table 4 -> regression      Fig 12 -> case2_matmul
+  Table 5 -> vminority       §Roofline -> roofline (reads dryrun_out/)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (case2_matmul, hang, issue_dist, logsize,
+                            overhead, regression, roofline, vminority)
+    sections = [
+        ("fig8_overhead", overhead.main),
+        ("fig9_logsize", logsize.main),
+        ("fig10_hang", hang.main),
+        ("fig11_issue_dist", issue_dist.main),
+        ("table4_regression", regression.main),
+        ("fig12_case2", case2_matmul.main),
+        ("table5_vminority", vminority.main),
+        ("roofline", roofline.main),
+    ]
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in sections:
+        print(f"# --- {name} ---")
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"# FAILED sections: {failures}")
+        sys.exit(1)
+    print("# all benchmark sections completed")
+
+
+if __name__ == "__main__":
+    main()

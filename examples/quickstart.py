@@ -1,0 +1,41 @@
+"""Quickstart: attach FLARE to a training run and read its diagnosis.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import tempfile
+
+from repro.configs import get_reduced
+from repro.core.events import load_jsonl
+from repro.core.metrics import aggregate_step, steps_in
+from repro.core.report import ascii_timeline
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.train import RunConfig, Trainer
+
+
+def main():
+    cfg = get_reduced("llama3.2-1b")
+    with tempfile.TemporaryDirectory() as d:
+        log = os.path.join(d, "trace.jsonl")
+        run = RunConfig(model=cfg, global_batch=4, seq_len=64, steps=20,
+                        peak_lr=3e-3, warmup_steps=5,
+                        opt=AdamWConfig(lr=3e-3),
+                        flare=True, flare_log=log)
+        trainer = Trainer(run)
+        hist = trainer.train()
+        print(f"trained {len(hist)} steps: loss {hist[0]['loss']:.3f} -> "
+              f"{hist[-1]['loss']:.3f} "
+              f"({hist[-1]['tokens_per_s']:.0f} tok/s)")
+        print(f"FLARE logged {trainer.daemon.bytes_logged / 1e3:.1f} KB "
+              f"({trainer.daemon.events_emitted} events)")
+        events = load_jsonl(log)
+        by_rank = {0: events}
+        step = steps_in(by_rank)[-2]
+        m = aggregate_step(by_rank, step)
+        print(f"step {step}: throughput={m.throughput:.0f} tok/s  "
+              f"V_inter={m.v_inter:.3f}  V_minority={m.v_minority:.3f}")
+        print(ascii_timeline(events, rank=0, step=step))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,201 @@
+"""Architecture configs and input-shape registry.
+
+Every assigned architecture has one module in this package exporting
+``CONFIG`` (exact published shape) and ``REDUCED`` (same family, tiny — used
+by CPU smoke tests).  ``get_config(name)`` / ``get_reduced(name)`` look them
+up; ``SHAPES`` defines the four assigned input-shape cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field
+from typing import Any
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture description (model shape only, no run knobs)."""
+
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int  # query heads; 0 for attention-free archs
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    qkv_bias: bool = False
+    # --- MoE ---
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_dense_residual: bool = False  # arctic: dense FF in parallel with MoE
+    capacity_factor: float = 1.25
+    # --- SSM (Mamba2 / SSD) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    conv_width: int = 4
+    ssm_chunk: int = 256
+    # --- hybrid (zamba2): one weight-shared attention block every k SSM layers
+    attn_every: int = 0
+    # --- VLM: a cross-attention layer after every k self-attention layers ---
+    cross_attn_every: int = 0
+    vision_tokens: int = 0
+    vision_d: int = 0
+    # --- misc ---
+    rope_theta: float = 500000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    notes: str = ""
+
+    def __post_init__(self):
+        if self.head_dim == 0 and self.num_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    # ------------------------------------------------------------------ #
+    @property
+    def attention_free(self) -> bool:
+        return self.num_heads == 0
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if the arch supports 500k-token decode (SSM/hybrid)."""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def d_inner(self) -> int:
+        """Mamba2 inner width."""
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim if self.ssm_state else 0
+
+    # ------------------------------------------------------------------ #
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6*N*D roofline MODEL_FLOPS)."""
+        d, v, L = self.d_model, self.vocab_size, self.num_layers
+        n = v * d  # embedding
+        if not self.tie_embeddings:
+            n += v * d  # lm head
+        n += d  # final norm
+        hd = self.head_dim
+        attn = d * (self.num_heads * hd) + 2 * d * (self.num_kv_heads * hd) \
+            + (self.num_heads * hd) * d if self.num_heads else 0
+        if self.qkv_bias and self.num_heads:
+            attn += (self.num_heads + 2 * self.num_kv_heads) * hd
+        ff_dense = 3 * d * self.d_ff  # SwiGLU: gate, up, down
+        per_layer_norms = 2 * d
+        if self.family in ("dense", "audio"):
+            n += L * (attn + ff_dense + per_layer_norms)
+        elif self.family == "moe":
+            moe = self.num_experts * 3 * d * self.d_ff + d * self.num_experts
+            dense_res = ff_dense if self.moe_dense_residual else 0
+            n += L * (attn + moe + dense_res + per_layer_norms)
+        elif self.family == "ssm":
+            n += L * (self._mamba_block_params() + d)
+        elif self.family == "hybrid":
+            # L mamba layers + ONE shared attention block (+ its ff)
+            n += L * (self._mamba_block_params() + d)
+            n += attn + ff_dense + per_layer_norms
+        elif self.family == "vlm":
+            n_self = L - L // (self.cross_attn_every + 1) if self.cross_attn_every else L
+            n_cross = L - n_self
+            cross = attn + d  # extra gate + kv from vision (same shapes)
+            n += n_self * (attn + ff_dense + per_layer_norms)
+            n += n_cross * (cross + ff_dense + per_layer_norms)
+        return n
+
+    def _mamba_block_params(self) -> int:
+        d, di = self.d_model, self.d_inner
+        h = self.ssm_heads
+        n = d * (2 * di + 2 * self.ssm_state + h) + di  # in_proj(z,x,B,C,dt)
+        n += self.conv_width * (di + 2 * self.ssm_state)  # conv over x,B,C
+        n += h + h  # A_log, D
+        n += di * d  # out_proj
+        n += di  # gate norm
+        return n
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only routed experts) — for 6*N_active*D."""
+        if self.family != "moe":
+            return self.param_count()
+        d, L = self.d_model, self.num_layers
+        full = self.param_count()
+        all_experts = L * self.num_experts * 3 * d * self.d_ff
+        active = L * self.experts_per_token * 3 * d * self.d_ff
+        return full - all_experts + active
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+    @property
+    def tokens(self) -> int:
+        # decode processes ONE new token per sequence in the batch
+        n = 1 if self.kind == "decode" else self.seq_len
+        return n * self.global_batch
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+ARCH_MODULES: dict[str, str] = {
+    "zamba2-2.7b": "zamba2_2p7b",
+    "dbrx-132b": "dbrx_132b",
+    "arctic-480b": "arctic_480b",
+    "llama3-405b": "llama3_405b",
+    "llama3.2-1b": "llama3p2_1b",
+    "qwen2-0.5b": "qwen2_0p5b",
+    "qwen2-72b": "qwen2_72b",
+    "musicgen-large": "musicgen_large",
+    "mamba2-780m": "mamba2_780m",
+    "llama-3.2-vision-11b": "llama3p2_vision_11b",
+    # the paper's own workhorse model (§6.4, Case-1)
+    "llama-20b-paper": "llama_20b_paper",
+}
+
+ASSIGNED_ARCHS = [k for k in ARCH_MODULES if k != "llama-20b-paper"]
+
+
+def _load(name: str):
+    if name not in ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCH_MODULES)}")
+    return importlib.import_module(f"repro.configs.{ARCH_MODULES[name]}")
+
+
+def get_config(name: str) -> ModelConfig:
+    return _load(name).CONFIG
+
+
+def get_reduced(name: str) -> ModelConfig:
+    return _load(name).REDUCED
+
+
+def list_archs() -> list[str]:
+    return list(ARCH_MODULES)
+
+
+def cells(include_skipped: bool = False):
+    """Yield every assigned (arch, shape) cell; honours the long_500k skip rule."""
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            skipped = shape.name == "long_500k" and not cfg.sub_quadratic
+            if skipped and not include_skipped:
+                continue
+            yield arch, shape.name, skipped
+
+
+def scale(cfg: ModelConfig, **overrides: Any) -> ModelConfig:
+    return dataclasses.replace(cfg, **overrides)

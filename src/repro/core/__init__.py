@@ -1,0 +1,4 @@
+"""FLARE: full-stack tracing daemon + diagnostic engine (the paper's core)."""
+from repro.core.events import EventKind, TraceEvent  # noqa: F401
+from repro.core.daemon import TracingDaemon, DaemonConfig, attach, get_daemon  # noqa: F401
+from repro.core.engine import Anomaly, DiagnosticEngine, Team  # noqa: F401

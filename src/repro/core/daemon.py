@@ -1,0 +1,234 @@
+"""Per-process tracing daemon (paper §4): timing manager + background thread.
+
+Responsibilities (mirroring Fig 4):
+  * collect spans from the Python interceptor, the dataloader seam, GC,
+    registered kernel entry points, and step boundaries;
+  * time asynchronous device work without blocking the training thread —
+    completion probing happens on the daemon thread against shadow futures
+    (the CUDA-event analogue; see DESIGN.md §2);
+  * reconstruct Python<->kernel call stacks from span intervals (stack.py)
+    before streaming;
+  * heartbeat: if no event completes within ``hang_timeout`` while a step
+    is in flight, report a suspected hang to the engine;
+  * stream, in the background, to any sink: the in-process diagnostic
+    engine and/or a JSONL file.
+
+Kernel registration is the explicit "C++ interface" of the paper: the op
+library (repro.kernels.*, repro.parallel.collectives) self-registers when a
+daemon is attached; backends are never patched.
+"""
+from __future__ import annotations
+
+import os
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+from repro.core.events import (EventKind, EventRingBuffer, TraceEvent,
+                               dump_jsonl)
+from repro.core.interceptor import PyApiInterceptor
+from repro.core.stack import reconstruct_stacks
+
+_GLOBAL_DAEMON: Optional["TracingDaemon"] = None
+
+
+@dataclass
+class DaemonConfig:
+    rank: int = 0
+    backend: str = "dense-train"   # historical-profile key (paper §8.2)
+    hang_timeout: float = 30.0
+    drain_interval: float = 0.05
+    log_path: Optional[str] = None
+    buffer_capacity: int = 200_000
+    reconstruct: bool = True
+    enabled: bool = True
+
+
+class TracingDaemon:
+    def __init__(self, config: DaemonConfig | None = None):
+        self.cfg = config or DaemonConfig()
+        self.buffer = EventRingBuffer(self.cfg.buffer_capacity)
+        self.interceptor = PyApiInterceptor(self._on_api_span, self._on_gc)
+        self._sinks: list[Callable[[list[TraceEvent]], None]] = []
+        self._hang_cb: Optional[Callable[[dict], None]] = None
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self._step = -1
+        self._step_t0 = 0.0
+        self._in_step = False
+        self._last_completion = time.perf_counter()
+        self._pending: "queue.Queue" = queue.Queue()
+        self._last_stack: list[str] = []
+        self.bytes_logged = 0
+        self.events_emitted = 0
+        self._attached = False
+
+    # ------------------------------------------------------------------ #
+    # lifecycle
+    # ------------------------------------------------------------------ #
+    def attach(self):
+        """Attach to the current training process (plug-and-play)."""
+        if self._attached or not self.cfg.enabled:
+            return self
+        self.interceptor.register_from_env()
+        self.interceptor.install()
+        self._stop.clear()
+        self._thread = threading.Thread(
+            target=self._run, daemon=True, name="flare-daemon")
+        self._thread.start()
+        self._attached = True
+        global _GLOBAL_DAEMON
+        _GLOBAL_DAEMON = self
+        return self
+
+    def detach(self):
+        if not self._attached:
+            return
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=2.0)
+        self.interceptor.uninstall()
+        self._flush()
+        self._attached = False
+        global _GLOBAL_DAEMON
+        if _GLOBAL_DAEMON is self:
+            _GLOBAL_DAEMON = None
+
+    def add_sink(self, sink: Callable[[list[TraceEvent]], None]):
+        self._sinks.append(sink)
+
+    def on_hang(self, cb: Callable[[dict], None]):
+        self._hang_cb = cb
+
+    # ------------------------------------------------------------------ #
+    # event entry points
+    # ------------------------------------------------------------------ #
+    def _emit(self, ev: TraceEvent):
+        self.buffer.append(ev)
+        self.events_emitted += 1
+        self._last_completion = time.perf_counter()
+
+    def _on_api_span(self, name: str, t0: float, t1: float):
+        self._emit(TraceEvent(EventKind.PY_API, name, self.cfg.rank,
+                              t0, t0, t1, step=self._step))
+
+    def _on_gc(self, name: str, t0: float, t1: float):
+        self._emit(TraceEvent(EventKind.GC, name, self.cfg.rank,
+                              t0, t0, t1, step=self._step))
+
+    def record_span(self, kind: EventKind, name: str, t0: float, t1: float,
+                    **meta):
+        self._emit(TraceEvent(kind, name, self.cfg.rank, t0, t0, t1,
+                              step=self._step, meta=meta))
+
+    def step_begin(self, step: int):
+        self._step = step
+        self._step_t0 = time.perf_counter()
+        self._in_step = True
+
+    def step_end(self, **meta):
+        t1 = time.perf_counter()
+        self._emit(TraceEvent(EventKind.STEP, f"step_{self._step}",
+                              self.cfg.rank, self._step_t0, self._step_t0,
+                              t1, step=self._step, meta=meta))
+        self._in_step = False
+
+    def set_stack(self, stack: list[str]):
+        """Training thread publishes its logical call stack (hang analysis)."""
+        self._last_stack = list(stack)
+
+    # ------------------------------------------------------------------ #
+    # kernel registration — the explicit infra-team interface
+    # ------------------------------------------------------------------ #
+    def register_kernel(self, name: str, kind: EventKind,
+                        meta_fn: Optional[Callable[..., dict]] = None):
+        """Decorator: wraps an op-library entry point.
+
+        Issue timestamp is taken at dispatch.  Completion is probed on the
+        daemon thread via a shadow `block_until_ready` on (a sample of) the
+        returned arrays — the training thread is never blocked (Fig 4).
+        """
+        def deco(fn):
+            def wrapped(*args, **kwargs):
+                if not self._attached:
+                    return fn(*args, **kwargs)
+                issue = time.perf_counter()
+                out = fn(*args, **kwargs)
+                meta = meta_fn(*args, **kwargs) if meta_fn else {}
+                self._pending.put((name, kind, issue, self._step, out, meta))
+                return out
+            wrapped.__name__ = getattr(fn, "__name__", name)
+            wrapped.__wrapped__ = fn
+            return wrapped
+        return deco
+
+    # ------------------------------------------------------------------ #
+    # background thread: timing manager + heartbeat + streaming
+    # ------------------------------------------------------------------ #
+    def _run(self):
+        while not self._stop.is_set():
+            self._probe_pending()
+            self._flush()
+            self._heartbeat()
+            time.sleep(self.cfg.drain_interval)
+        self._probe_pending()
+        self._flush()
+
+    def _probe_pending(self):
+        try:
+            while True:
+                name, kind, issue, step, out, meta = self._pending.get_nowait()
+                start = time.perf_counter()
+                try:
+                    import jax
+                    jax.block_until_ready(out)
+                except Exception:
+                    pass
+                end = time.perf_counter()
+                self._emit(TraceEvent(kind, name, self.cfg.rank, issue,
+                                      start, end, step=step, meta=meta))
+        except queue.Empty:
+            pass
+
+    def _flush(self):
+        events = self.buffer.drain()
+        if not events:
+            return
+        if self.cfg.reconstruct:
+            reconstruct_stacks(events)
+        for sink in self._sinks:
+            try:
+                sink(events)
+            except Exception:
+                pass
+        if self.cfg.log_path:
+            self.bytes_logged += dump_jsonl(events, self.cfg.log_path)
+
+    def _heartbeat(self):
+        now = time.perf_counter()
+        silent = now - self._last_completion
+        if self._in_step and silent > self.cfg.hang_timeout:
+            report = {"rank": self.cfg.rank, "silent_s": silent,
+                      "step": self._step, "stack": self._last_stack}
+            self._emit(TraceEvent(EventKind.HANG_SUSPECT, "hang_suspect",
+                                  self.cfg.rank, now, now, now,
+                                  step=self._step, meta=report))
+            if self._hang_cb:
+                try:
+                    self._hang_cb(report)
+                except Exception:
+                    pass
+            self._last_completion = now  # rate-limit repeat reports
+
+
+# --------------------------------------------------------------------------- #
+def attach(config: DaemonConfig | None = None) -> TracingDaemon:
+    """Module-level convenience: attach a daemon to this process."""
+    d = TracingDaemon(config)
+    return d.attach()
+
+
+def get_daemon() -> Optional[TracingDaemon]:
+    return _GLOBAL_DAEMON

@@ -1,0 +1,232 @@
+"""The diagnostic engine (paper §3, §5): streaming ingest -> detection ->
+root-cause narrowing -> team routing (Table 1).
+
+Pipeline (paper Fig 2):
+  ① hang errors: daemon heartbeats -> call-stack analysis -> intra-kernel
+     inspecting -> OPERATIONS team.
+  ① fail-slows: macro throughput changepoint, validated + attributed with
+     micro metrics (per-rank FLOPS, bandwidth) -> OPERATIONS team.
+  ② regressions: micro metrics (issue-latency W1, voids, FLOPS, bandwidth)
+     vs the healthy historical profile -> ALGORITHM or INFRASTRUCTURE team.
+  ③ anything unresolved escalates to cross-team review.
+
+Conservative policy (paper §8.2): the engine *reports*; it never kills jobs.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core import failslow as fs
+from repro.core import regression as rg
+from repro.core.events import EventKind, TraceEvent
+from repro.core.hang import HangDiagnosis, diagnose_hang
+from repro.core.history import HealthyProfile, HistoryStore
+from repro.core.metrics import StepMetrics, aggregate_step, steps_in
+
+
+class Team(str, enum.Enum):
+    OPERATIONS = "operations"
+    ALGORITHM = "algorithm"
+    INFRASTRUCTURE = "infrastructure"
+    CROSS_TEAM = "cross-team"
+
+
+@dataclass
+class Anomaly:
+    kind: str            # hang | fail_slow | regression
+    metric: str          # detector that fired
+    team: Team
+    root_cause: str
+    step: int = -1
+    severity: float = 1.0
+    ranks: list = field(default_factory=list)
+    evidence: dict = field(default_factory=dict)
+
+    def __str__(self):
+        return (f"[{self.kind}/{self.metric}] -> {self.team.value}: "
+                f"{self.root_cause} (step {self.step}, "
+                f"severity {self.severity:.2f})")
+
+
+@dataclass
+class EngineConfig:
+    backend: str = "dense-train"
+    num_ranks: int = 1
+    kernel_shapes: dict = field(default_factory=dict)  # name -> shape (layout advisor)
+    failslow_window: int = 8
+    failslow_drop: float = 0.12
+    regression_consecutive: int = 2   # steps a micro signal must persist
+
+
+def _also_low_at_start(finding, baseline: StepMetrics,
+                       prof) -> bool:
+    name = finding.evidence.get("kernel", "")
+    base = baseline.bandwidth.get(name)
+    exp = prof.expected_bandwidth.get(name)
+    if base is None or not exp:
+        return True
+    return base < rg.BW_REGRESSION_FRAC * exp
+
+
+class DiagnosticEngine:
+    def __init__(self, config: EngineConfig,
+                 history: Optional[HistoryStore] = None):
+        self.cfg = config
+        self.history = history or HistoryStore()
+        self.events_by_rank: dict[int, list[TraceEvent]] = {}
+        self.metrics: dict[int, StepMetrics] = {}
+        self.anomalies: list[Anomaly] = []
+        self.baseline_metrics: Optional[StepMetrics] = None
+        self._tp_monitor = fs.ThroughputMonitor(
+            config.failslow_window, config.failslow_drop)
+        self._pending_regressions: dict[str, int] = {}
+
+    # ------------------------------------------------------------------ #
+    # ingest
+    # ------------------------------------------------------------------ #
+    def ingest(self, events: list[TraceEvent]):
+        for ev in events:
+            self.events_by_rank.setdefault(ev.rank, []).append(ev)
+
+    def ingest_all(self, events_by_rank: dict[int, list[TraceEvent]]):
+        for r, evs in events_by_rank.items():
+            self.events_by_rank.setdefault(r, []).extend(evs)
+
+    @property
+    def profile(self) -> Optional[HealthyProfile]:
+        return self.history.get(self.cfg.backend, self.cfg.num_ranks)
+
+    # ------------------------------------------------------------------ #
+    # per-step evaluation
+    # ------------------------------------------------------------------ #
+    def evaluate_step(self, step: int) -> list[Anomaly]:
+        m = aggregate_step(self.events_by_rank, step)
+        if m is None:
+            return []
+        self.metrics[step] = m
+        if self.baseline_metrics is None:
+            self.baseline_metrics = m
+        found: list[Anomaly] = []
+
+        # ---- fail-slow (macro ①, then micro attribution) -------------- #
+        drop = self._tp_monitor.observe(m.throughput)
+        if drop is not None:
+            f = fs.attribute_failslow(m, self.baseline_metrics, step, drop)
+            found.append(Anomaly(
+                kind="fail_slow", metric="throughput", team=Team.OPERATIONS,
+                root_cause={"gpu_underclock":
+                            f"GPU underclocking on ranks {f.ranks}",
+                            "network":
+                            "network degradation (jitter/congestion); "
+                            "binary-search probe plan attached",
+                            "unknown": "sudden slowdown, cause unresolved"
+                            }[f.cause],
+                step=step, severity=1.0 + drop, ranks=f.ranks,
+                evidence={"drop_frac": drop, **f.evidence,
+                          "probe_plan": f.probe_plan}))
+
+        # ---- mid-job bandwidth drop => fail-slow (network), not a
+        # regression: the paper's taxonomy keys on SUDDEN vs PERSISTENT ---- #
+        base_bw = self.baseline_metrics.bandwidth
+        slow_groups = [(n, bw / base_bw[n]) for n, bw in m.bandwidth.items()
+                       if n in base_bw and base_bw[n] > 0
+                       and bw < 0.75 * base_bw[n]]
+        if slow_groups and m is not self.baseline_metrics:
+            found.append(Anomaly(
+                kind="fail_slow", metric="bandwidth", team=Team.OPERATIONS,
+                root_cause="network degradation on "
+                           f"{len(slow_groups)} collective group(s) "
+                           "(jitter/CRC/congestion); probe plan attached",
+                step=step, severity=1.0 / min(f for _, f in slow_groups),
+                evidence={"slow_groups": slow_groups[:6],
+                          "probe_plan": fs.binary_search_plan(m.num_ranks)}))
+
+        # ---- regressions (micro ②-⑤ vs healthy history) --------------- #
+        prof = self.profile
+        if prof is not None:
+            findings: list[rg.RegressionFinding] = []
+            il = rg.check_issue_latency(m, prof)
+            if il:
+                findings.append(il)
+            findings.extend(rg.check_voids(m, prof))
+            flops_f = rg.check_flops(m, prof)
+            rg.annotate_layout(flops_f, self.cfg.kernel_shapes)
+            findings.extend(flops_f)
+            # bandwidth regression must be low from the job's FIRST step
+            # (persistent config/software issue, e.g. GDR module down)
+            bw_f = rg.check_bandwidth(m, prof)
+            bw_f = [f for f in bw_f
+                    if _also_low_at_start(f, self.baseline_metrics, prof)]
+            findings.extend(bw_f)
+            # prefer the specific detector: if v_inter fired and the issue-
+            # latency culprit is the dataloader, drop the duplicate finding
+            if any(f.metric == "v_inter" for f in findings):
+                findings = [f for f in findings
+                            if not (f.metric == "issue_latency"
+                                    and "dataloader" in f.root_cause.lower())]
+            for f in findings:
+                key = f.metric
+                self._pending_regressions[key] = \
+                    self._pending_regressions.get(key, 0) + 1
+                if self._pending_regressions[key] >= \
+                        self.cfg.regression_consecutive:
+                    found.append(Anomaly(
+                        kind="regression", metric=f.metric,
+                        team=Team(f.suggested_team),
+                        root_cause=f.root_cause, step=step,
+                        severity=f.severity, evidence=f.evidence))
+            fired = {f.metric for f in findings}
+            for key in list(self._pending_regressions):
+                if key not in fired:
+                    self._pending_regressions[key] = 0
+
+        self.anomalies.extend(found)
+        return found
+
+    def evaluate_all(self) -> list[Anomaly]:
+        out = []
+        for step in steps_in(self.events_by_rank):
+            out.extend(self.evaluate_step(step))
+        out.extend(self.check_hangs())
+        return out
+
+    # ------------------------------------------------------------------ #
+    # hang path (①)
+    # ------------------------------------------------------------------ #
+    def check_hangs(self, ring_progress=None) -> list[Anomaly]:
+        suspects = {}
+        for r, evs in self.events_by_rank.items():
+            for e in evs:
+                if e.kind == EventKind.HANG_SUSPECT:
+                    suspects[r] = e.meta.get("stack", [])
+        if len(suspects) < max(len(self.events_by_rank) // 2, 1):
+            return []
+        return [self.diagnose_hang(suspects, ring_progress)]
+
+    def diagnose_hang(self, stacks: dict,
+                      ring_progress=None) -> Anomaly:
+        d: HangDiagnosis = diagnose_hang(stacks, ring_progress)
+        a = Anomaly(
+            kind="hang",
+            metric="intra_kernel_inspecting" if d.used_inspector
+            else "call_stack_analysis",
+            team=Team.OPERATIONS,
+            root_cause=d.detail, ranks=d.faulty_ranks,
+            evidence={"hang_kind": d.kind, "link": d.link})
+        self.anomalies.append(a)
+        return a
+
+    # ------------------------------------------------------------------ #
+    # profile learning helper
+    # ------------------------------------------------------------------ #
+    def learn_healthy(self, steps: Optional[list[int]] = None,
+                      margin: float = 1.5) -> HealthyProfile:
+        steps = steps or steps_in(self.events_by_rank)
+        ms = [aggregate_step(self.events_by_rank, s) for s in steps]
+        ms = [m for m in ms if m is not None]
+        return self.history.learn_from_metrics(
+            self.cfg.backend, self.cfg.num_ranks, ms, margin=margin)

@@ -1,0 +1,159 @@
+"""The five aggregated metrics of FLARE (paper §5.2, Fig 7).
+
+  ① training throughput        (macro — fail-slow detection)
+  ② compute-kernel FLOPS        (micro — underclock / layout regressions)
+  ③ collective bandwidth        (micro — jitter / GDR regressions)
+  ④ issue-latency distribution  (micro — kernel-issue stalls: GC, sync)
+  ⑤ void percentage V_inter / V_minority (micro — uncovered operations)
+
+All are computed from per-rank event lists for one training step.  FLOPS of
+compute kernels that overlap a communication kernel are flagged so they are
+not mistakenly treated as regressed (§5.2.2, MoE overlap).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core.events import DEVICE_KINDS, EventKind, TraceEvent
+
+
+@dataclass
+class StepMetrics:
+    step: int
+    t_step: float
+    throughput: float                       # tokens / s   (①)
+    flops: dict                             # name -> per-rank achieved FLOP/s (②)
+    flops_overlapped: set                   # kernel names excluded from ② checks
+    bandwidth: dict                         # (name) -> achieved B/s          (③)
+    issue_latencies: np.ndarray             # comm-kernel issue latencies     (④)
+    v_inter: float                          # ⑤
+    v_minority: float                       # ⑤
+    t_inter: float
+    api_spans: dict                         # api name -> total host seconds
+    num_ranks: int = 1
+
+
+def _step_events(events: list[TraceEvent], step: int):
+    return [e for e in events if e.step == step]
+
+
+def aggregate_step(events_by_rank: dict[int, list[TraceEvent]],
+                   step: int) -> Optional[StepMetrics]:
+    ranks = sorted(events_by_rank)
+    per_rank = {r: _step_events(events_by_rank[r], step) for r in ranks}
+    if not any(per_rank.values()):
+        return None
+
+    # ---- step span & throughput (①) ---------------------------------- #
+    step_spans = [e for r in ranks for e in per_rank[r]
+                  if e.kind == EventKind.STEP]
+    if step_spans:
+        t_step = float(np.mean([e.duration for e in step_spans]))
+        tokens = sum(e.meta.get("tokens", 0) for e in step_spans)
+    else:
+        all_ev = [e for r in ranks for e in per_rank[r]]
+        t0 = min(e.start_ts for e in all_ev)
+        t1 = max(e.end_ts for e in all_ev)
+        t_step = t1 - t0
+        tokens = 0
+    throughput = tokens / t_step if t_step > 0 else 0.0
+
+    # ---- device kernels ------------------------------------------------ #
+    flops: dict[str, dict[int, float]] = {}
+    overlapped: set[str] = set()
+    bandwidth: dict[str, float] = {}
+    issue_lat: list[float] = []
+
+    for r in ranks:
+        comm_iv = [(e.start_ts, e.end_ts) for e in per_rank[r]
+                   if e.kind == EventKind.KERNEL_COMM]
+        for e in per_rank[r]:
+            if e.kind == EventKind.KERNEL_COMPUTE and e.meta.get("flops"):
+                f = e.meta["flops"] / max(e.duration, 1e-12)
+                flops.setdefault(e.name, {})[r] = f
+                # comp/comm overlap accounting (§5.2.2)
+                for (s, t) in comm_iv:
+                    inter = min(t, e.end_ts) - max(s, e.start_ts)
+                    if inter > 0.5 * e.duration:
+                        overlapped.add(e.name)
+                        break
+            elif e.kind == EventKind.KERNEL_COMM:
+                issue_lat.append(e.issue_latency)
+
+    # bandwidth (③): per comm-op instance, last-issuer start to end
+    comm_by_name: dict[str, list[TraceEvent]] = {}
+    for r in ranks:
+        for e in per_rank[r]:
+            if e.kind == EventKind.KERNEL_COMM:
+                comm_by_name.setdefault(e.name, []).append(e)
+    for name, evs in comm_by_name.items():
+        start = max(e.start_ts for e in evs)
+        end = max(e.end_ts for e in evs)
+        nbytes = evs[0].meta.get("bytes", 0)
+        if end > start and nbytes:
+            bandwidth[name] = nbytes / (end - start)
+
+    # ---- void percentages (⑤) ----------------------------------------- #
+    v_inters, v_minors, t_inters = [], [], []
+    for r in ranks:
+        evs = per_rank[r]
+        dl = [e for e in evs if e.kind == EventKind.DATALOADER]
+        dev = sorted([e for e in evs if e.kind in DEVICE_KINDS],
+                     key=lambda e: e.start_ts)
+        sspan = next((e for e in evs if e.kind == EventKind.STEP), None)
+        tstep_r = sspan.duration if sspan else t_step
+        if not dev or tstep_r <= 0:
+            continue
+        # T_inter: last kernel before the dataloader to first kernel after
+        t_inter = 0.0
+        for d in dl:
+            before = [e.end_ts for e in dev if e.end_ts <= d.start_ts]
+            after = [e.start_ts for e in dev if e.start_ts >= d.end_ts]
+            lo = max(before) if before else d.start_ts
+            hi = min(after) if after else d.end_ts
+            t_inter += max(hi - lo, 0.0)
+        if not dl:  # no dataloader in step (serving) -> t_inter = 0
+            t_inter = 0.0
+        # V_minority: device gaps where the NEXT kernel was already issued
+        # before the device went idle — i.e. the device was busy running
+        # something outside FLARE's tracing (paper: "launched but remain
+        # un-executed").  Gaps where the next kernel was issued late are
+        # kernel-issue stalls (metric ④), not minority kernels.
+        # gaps before COMM kernels are collective barrier waits (peer
+        # stragglers), not minority kernels — bandwidth (③) covers those.
+        gaps = 0.0
+        for a, b in zip(dev[:-1], dev[1:]):
+            gap = b.start_ts - a.end_ts
+            if gap > 0.0 and b.issue_ts <= a.end_ts \
+                    and b.kind == EventKind.KERNEL_COMPUTE:
+                gaps += gap
+        denom = max(tstep_r - t_inter, 1e-12)
+        v_inters.append(min(t_inter / tstep_r, 1.0))
+        v_minors.append(min(gaps / denom, 1.0))
+        t_inters.append(t_inter)
+
+    # ---- host API spans (root-cause narrowing) ------------------------- #
+    api_spans: dict[str, float] = {}
+    for r in ranks:
+        for e in per_rank[r]:
+            if e.kind in (EventKind.PY_API, EventKind.GC, EventKind.SYNC,
+                          EventKind.DATALOADER):
+                api_spans[e.name] = api_spans.get(e.name, 0.0) + e.duration
+
+    flops_mean = {k: v for k, v in flops.items()}
+    return StepMetrics(
+        step=step, t_step=t_step, throughput=throughput,
+        flops=flops_mean, flops_overlapped=overlapped, bandwidth=bandwidth,
+        issue_latencies=np.asarray(issue_lat, np.float64),
+        v_inter=float(np.mean(v_inters)) if v_inters else 0.0,
+        v_minority=float(np.mean(v_minors)) if v_minors else 0.0,
+        t_inter=float(np.mean(t_inters)) if t_inters else 0.0,
+        api_spans=api_spans, num_ranks=len(ranks))
+
+
+def steps_in(events_by_rank: dict[int, list[TraceEvent]]) -> list[int]:
+    s = {e.step for evs in events_by_rank.values() for e in evs if e.step >= 0}
+    return sorted(s)

@@ -1,0 +1,317 @@
+"""Device-timeline + cluster simulator (stream semantics, Fig 7).
+
+The diagnostic engine consumes *event streams*; this module produces them
+for an N-rank cluster with exact GPU-stream semantics:
+
+    issue_ts   = per-rank CPU dispatch time (bounded run-ahead queue)
+    exec_start = max(issue_ts, device_free)          [compute]
+    exec_start = max over group of per-rank ready    [collectives]
+
+so kernel-issue stalls (GC, unnecessary sync), fail-slows (underclock,
+jitter), void time (uninstrumented kernels, slow dataloader) and hangs all
+reproduce the paper's timeline behaviour deterministically — at 1024+
+simulated ranks on one host.  A real fleet feeds the same engine from the
+per-process daemons instead; nothing in the engine knows which source it is.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Optional
+
+import numpy as np
+
+from repro.configs import ModelConfig
+from repro.core.events import EventKind, TraceEvent
+
+# ----------------------------------------------------------------------- #
+# Program model
+# ----------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class SimOp:
+    name: str
+    kind: str                      # compute | comm | cpu
+    duration: float                # seconds (healthy)
+    flops: float = 0.0
+    bytes: int = 0
+    group: str = "dp"              # comm group id (comm ops)
+    cpu_overhead: float = 20e-6    # host time to issue this op
+    meta: dict = field(default_factory=dict)  # e.g. {"shape": (8192, 8484)}
+
+
+def program_from_config(cfg: ModelConfig, *, tokens_global: int = 262144,
+                        num_chips: int = 32, layer_groups: int = 8,
+                        mfu: float = 0.45, chip_flops: float = 197e12,
+                        link_bw: float = 5e10) -> list[SimOp]:
+    """Per-chip, per-step op program whose durations follow the arch FLOPs.
+
+    The model+batch are sharded over ``num_chips``; durations/flops/bytes
+    are the per-chip share, so issue-latency scales stay realistic.
+    """
+    n_active = cfg.active_param_count()
+    step_flops = 6.0 * n_active * tokens_global / num_chips
+    per_group = step_flops / layer_groups
+    ops: list[SimOp] = [SimOp("dataloader.next_batch", "cpu", 1e-3)]
+    # split each group: attention-ish op (40%), ffn-ish op (60%), one comm
+    comm_bytes = int(2 * 2 * n_active / (layer_groups * num_chips))
+    for g in range(layer_groups):
+        ops.append(SimOp(f"attn_core[{g}]", "compute",
+                         0.4 * per_group / (chip_flops * mfu),
+                         flops=0.4 * per_group))
+        ops.append(SimOp(f"ffn_matmul[{g}]", "compute",
+                         0.6 * per_group / (chip_flops * mfu),
+                         flops=0.6 * per_group,
+                         meta={"shape": (8192, cfg.d_ff or 8192)}))
+        ops.append(SimOp(f"allreduce[{g}]", "comm",
+                         comm_bytes / link_bw, bytes=comm_bytes, group="dp"))
+    ops.append(SimOp("optimizer.update", "compute",
+                     0.02 * step_flops / (chip_flops * mfu),
+                     flops=0.02 * step_flops))
+    return ops
+
+
+# ----------------------------------------------------------------------- #
+# Injections
+# ----------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class Injection:
+    kind: str
+    # gc | sync_after_comm | straggler | network_jitter | hang |
+    # slow_dataloader | minority_kernels | slow_compute | pyapi_stall
+    start_step: int = 0
+    ranks: tuple = ()              # affected ranks (empty = all)
+    factor: float = 1.0            # slowdown multiplier
+    duration: float = 0.0          # injected span length (gc/pyapi/dataloader)
+    period_ops: int = 6            # one injection every N ops (gc/pyapi)
+    op_match: str = ""             # substring matched against op names
+    api_name: str = "gc.collect"   # emitted event name (pyapi_stall)
+    at_step: int = 1               # hang step
+    at_op: int = -1                # hang op index (-1 = first comm)
+    meta: dict = field(default_factory=dict)
+
+    def hits_rank(self, r: int) -> bool:
+        return not self.ranks or r in self.ranks
+
+
+@dataclass
+class HangSnapshot:
+    step: int
+    op_index: int
+    op_name: str
+    comm: bool
+    stacks: dict                     # rank -> list[str]
+    ring_progress: Optional[np.ndarray]  # per-rank completed ring steps
+    group_ranks: list
+    truth_rank: int                  # ground truth (for tests/benchmarks)
+
+
+# ----------------------------------------------------------------------- #
+# Simulator
+# ----------------------------------------------------------------------- #
+class ClusterSimulator:
+    def __init__(self, num_ranks: int, program: list[SimOp], *,
+                 seed: int = 0, queue_depth: int = 4096,
+                 injections: list[Injection] | None = None,
+                 ring_total_steps: int | None = None):
+        self.n = num_ranks
+        self.program = program
+        self.rng = np.random.default_rng(seed)
+        self.queue_depth = queue_depth
+        self.injections = list(injections or [])
+        self.ring_total_steps = ring_total_steps or 2 * (num_ranks - 1)
+        self.hang: Optional[HangSnapshot] = None
+
+    # ------------------------------------------------------------------ #
+    def run(self, num_steps: int) -> dict[int, list[TraceEvent]]:
+        n = self.n
+        events: dict[int, list[TraceEvent]] = {r: [] for r in range(n)}
+        cpu = np.zeros(n)
+        gpu = np.zeros(n)
+        ring = np.zeros((n, max(self.queue_depth, 1)))  # issue-queue ends
+        qi = 0
+
+        for step in range(num_steps):
+            step_t0 = cpu.copy()
+            for oi, op in enumerate(self.program):
+                inj_hang = self._hang_at(step, oi, op)
+                if inj_hang is not None:
+                    self._finalize_hang(events, step, oi, op, inj_hang,
+                                        cpu, gpu)
+                    return events
+                # ---- host-side pre-op stalls (GC / unnecessary sync) ---- #
+                for inj in self.injections:
+                    if step < inj.start_step:
+                        continue
+                    if inj.kind in ("gc", "pyapi_stall") and \
+                            (oi % max(inj.period_ops, 1)
+                             == hash((step, inj.kind)) % max(inj.period_ops, 1)):
+                        for r in range(n):
+                            if not inj.hits_rank(r):
+                                continue
+                            t0 = cpu[r]
+                            cpu[r] += inj.duration * \
+                                (0.75 + 0.5 * self.rng.random())
+                            kind = (EventKind.GC if inj.kind == "gc"
+                                    else EventKind.PY_API)
+                            events[r].append(TraceEvent(
+                                kind, inj.api_name, r, t0, t0, cpu[r],
+                                step=step))
+                # ---- issue-queue bound (CPU can't run ahead forever) --- #
+                cpu = np.maximum(cpu, ring[:, qi % ring.shape[1]])
+                # ---- per-op host overhead ------------------------------ #
+                over = op.cpu_overhead * (0.5 + self.rng.random(n))
+                issue = cpu + over
+                cpu = issue.copy()
+
+                if op.kind == "cpu":
+                    dur = self._cpu_duration(op, step)
+                    for r in range(n):
+                        events[r].append(TraceEvent(
+                            EventKind.DATALOADER
+                            if "dataloader" in op.name else EventKind.PY_API,
+                            op.name, r, issue[r], issue[r], issue[r] + dur[r],
+                            step=step,
+                            meta={"tokens": self.program_tokens()}
+                            if "dataloader" in op.name else {}))
+                    cpu = issue + dur
+                    continue
+
+                dur = self._device_duration(op, step)
+                if op.kind == "compute":
+                    start = np.maximum(issue, gpu)
+                    end = start + dur
+                    gpu = end
+                else:  # collective: starts when every rank is ready
+                    ready = np.maximum(issue, gpu)
+                    start_all = float(ready.max())
+                    start = np.full(n, start_all)
+                    end = start + float(dur.max())
+                    gpu = end.copy()
+                # uninstrumented minority kernels occupy the device silently
+                gpu = gpu + self._minority_time(op, step)
+                ring[:, qi % ring.shape[1]] = end
+                qi += 1
+                kind = (EventKind.KERNEL_COMPUTE if op.kind == "compute"
+                        else EventKind.KERNEL_COMM)
+                for r in range(n):
+                    meta = {"flops": op.flops} if op.flops else {}
+                    if op.kind == "comm":
+                        meta = {"bytes": op.bytes, "group": op.group}
+                    if op.meta:
+                        meta.update(op.meta)
+                    events[r].append(TraceEvent(
+                        kind, op.name, r, issue[r], start[r], end[r],
+                        step=step, meta=meta))
+                # ---- sync-after-comm injection (Case-1) ---------------- #
+                if op.kind == "comm":
+                    for inj in self.injections:
+                        if (inj.kind == "sync_after_comm"
+                                and step >= inj.start_step):
+                            for r in range(n):
+                                if inj.hits_rank(r):
+                                    t0 = cpu[r]
+                                    cpu[r] = max(cpu[r], end[r])
+                                    events[r].append(TraceEvent(
+                                        EventKind.SYNC,
+                                        "jax@block_until_ready", r,
+                                        t0, t0, cpu[r], step=step))
+            # ---- step event per rank ------------------------------------ #
+            step_end = np.maximum(cpu, gpu)
+            for r in range(n):
+                events[r].append(TraceEvent(
+                    EventKind.STEP, f"step_{step}", r, step_t0[r],
+                    step_t0[r], step_end[r], step=step,
+                    meta={"tokens": self.program_tokens()}))
+            # step-boundary sync: the loop reads back loss/metrics, so the
+            # CPU drains to the device each step (bounds run-ahead; makes
+            # healthy issue latencies spread ~uniformly over the step)
+            cpu = np.maximum(cpu, gpu)
+        return events
+
+    # ------------------------------------------------------------------ #
+    def program_tokens(self) -> int:
+        return 8192
+
+    def _cpu_duration(self, op: SimOp, step: int) -> np.ndarray:
+        dur = np.full(self.n, op.duration)
+        for inj in self.injections:
+            if inj.kind == "slow_dataloader" and step >= inj.start_step \
+                    and "dataloader" in op.name:
+                dur = dur * inj.factor + inj.duration
+        return dur * (0.9 + 0.2 * self.rng.random(self.n))
+
+    def _device_duration(self, op: SimOp, step: int) -> np.ndarray:
+        dur = np.full(self.n, op.duration)
+        for inj in self.injections:
+            if step < inj.start_step:
+                continue
+            if inj.kind in ("straggler", "underclock") and op.kind == "compute":
+                for r in inj.ranks:
+                    dur[r] *= inj.factor
+            elif inj.kind == "slow_compute" and op.kind == "compute" \
+                    and inj.op_match in op.name:
+                dur *= inj.factor
+            elif inj.kind == "network_jitter" and op.kind == "comm":
+                dur *= inj.factor * (0.8 + 0.4 * self.rng.random(self.n))
+        return dur * (0.98 + 0.04 * self.rng.random(self.n))
+
+    def _minority_time(self, op: SimOp, step: int) -> np.ndarray:
+        extra = np.zeros(self.n)
+        for inj in self.injections:
+            if inj.kind == "minority_kernels" and step >= inj.start_step \
+                    and op.kind == "compute":
+                extra += op.duration * inj.factor
+        return extra
+
+    # ------------------------------------------------------------------ #
+    def _hang_at(self, step: int, oi: int, op: SimOp) -> Optional[Injection]:
+        for inj in self.injections:
+            if inj.kind != "hang" or step != inj.at_step:
+                continue
+            if inj.at_op == oi:
+                return inj
+            if inj.at_op == -1 and op.kind == "comm":
+                return inj
+        return None
+
+    def _finalize_hang(self, events, step, oi, op, inj, cpu, gpu):
+        """Produce the hang snapshot: per-rank stacks + ring progress."""
+        r_fault = inj.ranks[0] if inj.ranks else 0
+        comm = op.kind == "comm" and not inj.meta.get("noncomm_crash", False)
+        stacks = {}
+        for r in range(self.n):
+            if comm:
+                stacks[r] = ["train_step", "backward", op.name]
+            else:
+                if r == r_fault:
+                    stacks[r] = ["train_step", "dataloader.next_batch",
+                                 "os.read"]
+                else:
+                    nxt = next((o.name for o in self.program[oi:]
+                                if o.kind == "comm"), "allreduce[0]")
+                    stacks[r] = ["train_step", "backward", nxt]
+        progress = None
+        if comm:
+            total = self.ring_total_steps
+            s0 = min(int(inj.meta.get("frozen_at", total // 3)),
+                     max(total - 1, 0))
+            fifo = int(inj.meta.get("fifo_depth", 2))
+            progress = np.zeros(self.n, np.int64)
+            for d in range(self.n):
+                r = (r_fault + d) % self.n
+                if d == 0:
+                    progress[r] = min(s0 + fifo, total)
+                elif d == 1:
+                    progress[r] = s0
+                else:
+                    progress[r] = min(s0 + min(d - 1, fifo), total)
+        self.hang = HangSnapshot(
+            step=step, op_index=oi, op_name=op.name, comm=comm,
+            stacks=stacks, ring_progress=progress,
+            group_ranks=list(range(self.n)), truth_rank=r_fault)
+        # heartbeat-style HANG_SUSPECT events from every healthy daemon
+        now = float(max(cpu.max(), gpu.max()) + 30.0)
+        for r in range(self.n):
+            events[r].append(TraceEvent(
+                EventKind.HANG_SUSPECT, "hang_suspect", r, now, now, now,
+                step=step, meta={"stack": stacks[r], "silent_s": 30.0}))

@@ -1,0 +1,1 @@
+from repro.data.loader import DataConfig, ShardedLoader  # noqa: F401

@@ -1,0 +1,50 @@
+"""Pallas TPU kernels for the compute hot-spots + FLARE tracing seams.
+
+Kernels (each: kernel.py = pl.pallas_call + BlockSpec, ops.py = jit'd
+wrapper, ref.py = pure-jnp oracle):
+  flash_attention  — blocked online-softmax causal GQA attention
+  padded_matmul    — Case-2: MXU-alignment padding inside the tile
+  ssd_scan         — Mamba2 chunked state-space scan
+  fused_norm       — residual+RMSNorm fusion (Table-5 minority kernels)
+  ring_reduce      — ring-combine step with progress export (intra-kernel
+                     inspecting seam)
+
+``interpret_default()`` is True off-TPU so kernels validate on CPU.
+Every ops.py entry point self-registers with an attached FLARE daemon —
+this is the paper's explicit "C++ interface" registration (§4.1).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+
+
+def interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def traced_op(name: str, kind: str = "compute",
+              meta_fn: Optional[Callable] = None):
+    """Wrap an op entry point with FLARE kernel tracing when attached."""
+    from repro.core.daemon import get_daemon
+    from repro.core.events import EventKind
+
+    ekind = (EventKind.KERNEL_COMPUTE if kind == "compute"
+             else EventKind.KERNEL_COMM)
+
+    def deco(fn):
+        def wrapped(*args, **kwargs):
+            daemon = get_daemon()
+            if daemon is None:
+                return fn(*args, **kwargs)
+            issue = time.perf_counter()
+            out = fn(*args, **kwargs)
+            meta = meta_fn(*args, **kwargs) if meta_fn else {}
+            daemon._pending.put((name, ekind, issue, daemon._step, out, meta))
+            return out
+        wrapped.__name__ = getattr(fn, "__name__", name)
+        wrapped.__wrapped__ = fn
+        return wrapped
+    return deco

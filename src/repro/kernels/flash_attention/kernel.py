@@ -1,0 +1,92 @@
+"""Blocked causal GQA flash-attention forward (Pallas TPU).
+
+Grid: (batch, q_heads, S // block_q).  Each program holds one q tile in
+VMEM and streams k/v tiles; the kv loop runs only to the causal frontier,
+so the compiled kernel does the ~S^2/2 work a full-mask XLA attention
+cannot (cf. §Perf hillclimb H1).  Online softmax carries (o, m, l) in
+registers; all matmul tiles are 128-aligned for the MXU.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q, block_k, sm_scale,
+                 causal, seq_len):
+    qi = pl.program_id(2)
+    q = q_ref[...].astype(jnp.float32) * sm_scale  # [block_q, hd]
+    hd = q.shape[-1]
+
+    q_base = qi * block_q
+    if causal:
+        hi = (q_base + block_q + block_k - 1) // block_k
+    else:
+        hi = seq_len // block_k
+
+    def body(j, carry):
+        o, m, l = carry
+        k = pl.load(k_ref, (pl.dslice(j * block_k, block_k),
+                            slice(None))).astype(jnp.float32)
+        v = pl.load(v_ref, (pl.dslice(j * block_k, block_k),
+                            slice(None))).astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [bq, bk]
+        if causal:
+            qpos = q_base + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            kpos = j * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=1)
+        o_new = o * alpha[:, None] + jax.lax.dot(p, v)
+        return o_new, m_new, l_new
+
+    o0 = jnp.zeros((block_q, hd), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    o, m, l = jax.lax.fori_loop(0, hi, body, (o0, m0, l0))
+    o = o / jnp.maximum(l, 1e-30)[:, None]
+    o_ref[...] = o.astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal=True, block_q=128, block_k=128,
+                        interpret=False):
+    """q [B,S,H,hd]; k/v [B,S,KV,hd] -> [B,S,H,hd]."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    sm_scale = hd ** -0.5
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0
+
+    grid = (B, H, S // block_q)
+    kernel = functools.partial(
+        _attn_kernel, block_q=block_q, block_k=block_k, sm_scale=sm_scale,
+        causal=causal, seq_len=S)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, None, hd),
+                         lambda b, h, i: (b, i, h, 0)),
+            pl.BlockSpec((None, S, None, hd),
+                         lambda b, h, i, G=G: (b, 0, h // G, 0)),
+            pl.BlockSpec((None, S, None, hd),
+                         lambda b, h, i, G=G: (b, 0, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, None, hd),
+                               lambda b, h, i: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+    return out

@@ -1,0 +1,28 @@
+"""jit'd entry point for the flash-attention kernel (+ FLARE registration)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import interpret_default, traced_op
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+
+
+def _meta(q, k, v, **kw):
+    B, S, H, hd = q.shape
+    causal = kw.get("causal", True)
+    factor = 0.5 if causal else 1.0
+    return {"flops": 4.0 * B * S * S * H * hd * factor,
+            "shape": list(q.shape)}
+
+
+@traced_op("flash_attention", "compute", _meta)
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, causal=True, block_q=128, block_k=128,
+                    interpret=None):
+    if interpret is None:
+        interpret = interpret_default()
+    return flash_attention_fwd(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=interpret)

@@ -1,0 +1,1 @@
+from repro.kernels.fused_norm.ops import fused_residual_rmsnorm  # noqa: F401

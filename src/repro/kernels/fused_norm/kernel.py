@@ -1,0 +1,51 @@
+"""Fused residual-add + RMSNorm (the Table-5 'minority kernel' fusion).
+
+Unfused, this is 3 HBM round trips (add, mean-square, scale); fused it is
+one read + two writes.  FLARE's V_minority metric is exactly what flags the
+unfused version (paper §7.3.3) — this kernel is the infra team's response.
+
+Grid: (rows // block_r,).  One row tile [block_r, D] in VMEM per program.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fused_kernel(x_ref, res_ref, scale_ref, y_ref, res_out_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    r = res_ref[...].astype(jnp.float32)
+    s = scale_ref[...].astype(jnp.float32)
+    h = x + r
+    var = jnp.mean(h * h, axis=-1, keepdims=True)
+    y = h * jax.lax.rsqrt(var + eps) * s[None, :]
+    res_out_ref[...] = h.astype(res_out_ref.dtype)
+    y_ref[...] = y.astype(y_ref.dtype)
+
+
+def fused_residual_rmsnorm_fwd(x, res, scale, *, eps=1e-5, block_r=256,
+                               interpret=False):
+    """x,res [R,D]; scale [D] -> (normed [R,D], new_residual [R,D])."""
+    R, D = x.shape
+    block_r = min(block_r, R)
+    assert R % block_r == 0
+    kernel = functools.partial(_fused_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(R // block_r,),
+        in_specs=[
+            pl.BlockSpec((block_r, D), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, D), lambda i: (i, 0)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_r, D), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, D), lambda i: (i, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((R, D), x.dtype),
+                   jax.ShapeDtypeStruct((R, D), x.dtype)],
+        interpret=interpret,
+    )(x, res, scale)

@@ -1,0 +1,24 @@
+"""jit'd entry point for the fused residual+RMSNorm kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import interpret_default, traced_op
+from repro.kernels.fused_norm.kernel import fused_residual_rmsnorm_fwd
+
+
+def _meta(x, res, scale, **kw):
+    return {"flops": 6.0 * x.size, "bytes": 4 * x.size * x.dtype.itemsize,
+            "shape": list(x.shape)}
+
+
+@traced_op("fused_residual_rmsnorm", "compute", _meta)
+@functools.partial(jax.jit, static_argnames=("eps", "block_r", "interpret"))
+def fused_residual_rmsnorm(x, res, scale, eps=1e-5, block_r=256,
+                           interpret=None):
+    if interpret is None:
+        interpret = interpret_default()
+    return fused_residual_rmsnorm_fwd(x, res, scale, eps=eps,
+                                      block_r=block_r, interpret=interpret)

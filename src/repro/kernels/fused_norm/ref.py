@@ -1,0 +1,10 @@
+"""Oracle for fused residual+RMSNorm."""
+import jax
+import jax.numpy as jnp
+
+
+def fused_ref(x, res, scale, eps=1e-5):
+    h = x.astype(jnp.float32) + res.astype(jnp.float32)
+    var = jnp.mean(h * h, axis=-1, keepdims=True)
+    y = h * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)[None, :]
+    return y.astype(x.dtype), h.astype(x.dtype)

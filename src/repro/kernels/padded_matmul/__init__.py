@@ -1,0 +1,1 @@
+from repro.kernels.padded_matmul.ops import padded_matmul  # noqa: F401

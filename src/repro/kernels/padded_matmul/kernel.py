@@ -1,0 +1,64 @@
+"""Tiled matmul with in-wrapper MXU-alignment padding (paper Case-2, Fig 12).
+
+The FSDP->Megatron migration shrank the FFN weight dim 33936 -> 8484, which
+is not 128-byte aligned; FLOPS dropped 65.3%.  The infra team's fix (per
+FLARE's layout advice) pads N up to the next 128 multiple so every MXU tile
+is full, then slices the result.  Padding happens in ops.py; this kernel is
+a classic 3-D-grid tiled matmul with a VMEM fp32 accumulator that requires
+aligned shapes.
+
+Grid: (M/bm, N/bn, K/bk) with the K dimension innermost ("arbitrary"
+semantics — the accumulator tile is revisited across k steps).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mm_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot(
+        a_ref[...].astype(jnp.float32), b_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == k_steps - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_tiled(a, b, *, block_m=128, block_n=128, block_k=128,
+                 interpret=False):
+    """a [M,K] @ b [K,N]; all dims must be tile-aligned (ops.py pads)."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    block_m = min(block_m, M)
+    block_n = min(block_n, N)
+    block_k = min(block_k, K)
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0, \
+        (M, N, K, "padded_matmul requires aligned shapes — use ops.padded_matmul")
+    k_steps = K // block_k
+    grid = (M // block_m, N // block_n, k_steps)
+    kernel = functools.partial(_mm_kernel, k_steps=k_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), a.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,41 @@
+"""Case-2 entry point: pad misaligned dims to the 128 tile, run the tiled
+kernel, slice back.  ``padded_matmul(a, b)`` accepts ANY (M,K)x(K,N)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import interpret_default, traced_op
+from repro.kernels.padded_matmul.kernel import matmul_tiled
+
+TILE = 128
+
+
+def _pad_to(x, m0, m1):
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def _meta(a, b, **kw):
+    M, K = a.shape
+    N = b.shape[1]
+    return {"flops": 2.0 * M * K * N, "shape": [M, K, N]}
+
+
+@traced_op("padded_matmul", "compute", _meta)
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def padded_matmul(a, b, block=TILE, interpret=None):
+    if interpret is None:
+        interpret = interpret_default()
+    M, K = a.shape
+    N = b.shape[1]
+    ap = _pad_to(a, block, block)
+    bp = _pad_to(b, block, block)
+    out = matmul_tiled(ap, bp, block_m=block, block_n=block, block_k=block,
+                       interpret=interpret)
+    return out[:M, :N]

@@ -1,0 +1,1 @@
+from repro.kernels.ring_reduce.ops import ring_combine  # noqa: F401

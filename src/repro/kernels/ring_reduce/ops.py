@@ -1,0 +1,22 @@
+"""jit'd entry point for the ring combine kernel (+ FLARE registration)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import interpret_default, traced_op
+from repro.kernels.ring_reduce.kernel import ring_combine_step
+
+
+def _meta(acc, incoming, **kw):
+    return {"bytes": 3 * acc.size * acc.dtype.itemsize,
+            "shape": list(acc.shape)}
+
+
+@traced_op("ring_combine", "comm", _meta)
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def ring_combine(acc, incoming, block=1024, interpret=None):
+    if interpret is None:
+        interpret = interpret_default()
+    return ring_combine_step(acc, incoming, block=block, interpret=interpret)

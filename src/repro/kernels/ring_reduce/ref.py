@@ -1,0 +1,10 @@
+"""Oracle for the ring combine step."""
+import jax.numpy as jnp
+
+
+def combine_ref(acc, incoming):
+    return acc + incoming
+
+
+def progress_ref(C, block):
+    return jnp.arange(1, C // block + 1, dtype=jnp.int32)

@@ -1,0 +1,76 @@
+"""Mamba2 chunked SSD scan (Pallas TPU).
+
+Grid: (batch, heads, L // chunk) — the chunk axis is innermost/sequential;
+the inter-chunk SSM state [N, P] lives in VMEM scratch and persists across
+grid steps for a fixed (b, h), reset at chunk 0.  Within a chunk the
+quadratic intra-term runs on the MXU; the state update is two small
+matmuls.  This is the TPU-native shape of the SSD algorithm: HBM traffic
+is O(L·(P+N)) while compute stays MXU-dense.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, *,
+                chunk):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _reset():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[...].astype(jnp.float32)          # [Q, P]
+    dt = dt_ref[...].astype(jnp.float32)        # [Q]
+    A = a_ref[0].astype(jnp.float32)            # scalar (this head)
+    Bm = b_ref[...].astype(jnp.float32)         # [Q, N]
+    Cm = c_ref[...].astype(jnp.float32)         # [Q, N]
+
+    dA = dt * A                                  # [Q], <= 0
+    cum = jnp.cumsum(dA)                         # inclusive decay
+    # ---- intra-chunk (quadratic) ---------------------------------------- #
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())))  # [Q, Q]
+    ti = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.exp(cum[:, None] - cum[None, :])
+    scores = jnp.where(ti >= si, cb * decay, 0.0) * dt[None, :]
+    y = jax.lax.dot(scores, x)                   # [Q, P]
+    # ---- inter-chunk (state) -------------------------------------------- #
+    S = state_ref[...]                           # [N, P]
+    y += jnp.exp(cum)[:, None] * jax.lax.dot(Cm, S)
+    w = jnp.exp(cum[-1] - cum) * dt              # [Q]
+    S_new = jnp.exp(cum[-1]) * S + jax.lax.dot_general(
+        Bm, w[:, None] * x, (((0,), (0,)), ((), ())))  # [N, P]
+    state_ref[...] = S_new
+    y_ref[...] = y.astype(y_ref.dtype)
+
+
+def ssd_scan_fwd(x, dt, A, Bm, Cm, *, chunk=128, interpret=False):
+    """x [B,L,H,P]; dt [B,L,H]; A [H]; Bm/Cm [B,L,N] -> y [B,L,H,P]."""
+    B, L, H, P = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, L)
+    assert L % chunk == 0
+    grid = (B, H, L // chunk)
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, chunk, None, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((None, chunk, None), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((None, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((None, chunk, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, chunk, None, P),
+                               lambda b, h, c: (b, c, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)

@@ -1,0 +1,7 @@
+"""Oracle: the sequential SSD recurrence (models/mamba2.ssd_sequential)."""
+from repro.models.mamba2 import ssd_sequential
+
+
+def ssd_ref(x, dt, A, Bm, Cm):
+    y, _ = ssd_sequential(x, dt, A, Bm, Cm)
+    return y

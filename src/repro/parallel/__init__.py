@@ -1,0 +1,1 @@
+from repro.parallel.sharding import MeshRules, param_specs, zero_spec  # noqa: F401

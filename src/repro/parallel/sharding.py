@@ -1,0 +1,231 @@
+"""Sharding rules: logical activation axes + path-matched parameter specs.
+
+Models are mesh-agnostic: they annotate activations with *logical* axis names
+via a ``constrain`` callback and parameters are matched by (parent, leaf)
+path.  ``MeshRules`` binds logical names to mesh axes.
+
+Default mapping (Megatron-style TP on ``model``, DP over ``pod``+``data``):
+    batch   -> (pod, data)        heads/kv_heads/ff/experts/vocab -> model
+    seq     -> None  (or model when sequence parallelism is on)
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _dp_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+@dataclass
+class MeshRules:
+    """Binds logical activation axes to mesh axes; used as model `constrain`."""
+
+    mesh: Mesh
+    sequence_parallel: bool = False
+    rules: dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        dp = _dp_axes(self.mesh)
+        defaults = {
+            "batch": dp,
+            "seq": "model" if self.sequence_parallel else None,
+            "embed": None,
+            "heads": "model",
+            "kv_heads": "model",
+            "ff": "model",
+            "vocab": "model",
+            "experts": "model",
+        }
+        defaults.update(self.rules)
+        self.rules = defaults
+
+    def spec(self, axes: tuple) -> P:
+        return P(*(self.rules.get(a) if a is not None else None for a in axes))
+
+    def __call__(self, x: jax.Array, axes: tuple) -> jax.Array:
+        if x.ndim != len(axes):
+            # models sometimes constrain flattened/extra-dim tensors; skip
+            return x
+        spec = self.spec(axes)
+        # Never shard a dim that isn't divisible AND smaller than the axis
+        # (GSPMD pads otherwise, which is fine, but a dim of size 1 over a
+        # 16-way axis is pure waste — drop the constraint there).
+        cleaned = []
+        for dim, entry in zip(x.shape, spec):
+            if entry is None:
+                cleaned.append(None)
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            n = math.prod(self.mesh.shape[a] for a in names)
+            cleaned.append(entry if (dim >= n and dim % n == 0) else None)
+        # a mesh axis may appear only once: with sequence parallelism both
+        # "seq" and "heads"/"ff" map to model — the LATER (more specific)
+        # dim wins, the earlier one is replicated
+        seen: set = set()
+        for i in range(len(cleaned) - 1, -1, -1):
+            e = cleaned[i]
+            if e is None:
+                continue
+            names = set(e if isinstance(e, tuple) else (e,))
+            if names & seen:
+                cleaned[i] = None
+            else:
+                seen |= names
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*cleaned)))
+
+
+# --------------------------------------------------------------------------- #
+# Parameter specs by (parent, leaf) path matching
+# --------------------------------------------------------------------------- #
+# trailing-dim specs; leading stacked scan dims are padded with None
+_PARAM_RULES: dict = {
+    ("embed", "embedding"): ("model", None),
+    ("head", "w"): (None, "model"),
+    ("attn", "wq"): (None, "model", None),
+    ("attn", "wk"): (None, "model", None),
+    ("attn", "wv"): (None, "model", None),
+    ("attn", "wo"): ("model", None, None),
+    ("attn", "bq"): ("model", None),
+    ("attn", "bk"): ("model", None),
+    ("attn", "bv"): ("model", None),
+    ("attn", "gate"): (),
+    ("mlp", "wi_gate"): (None, "model"),
+    ("mlp", "wi_up"): (None, "model"),
+    ("mlp", "wo"): ("model", None),
+    ("moe", "router"): (None, None),
+    ("moe", "wi_gate"): ("model", None, None),
+    ("moe", "wi_up"): ("model", None, None),
+    ("moe", "wo"): ("model", None, None),
+    ("mamba", "in_z"): (None, "model"),
+    ("mamba", "in_x"): (None, "model"),
+    ("mamba", "in_B"): (None, None),
+    ("mamba", "in_C"): (None, None),
+    ("mamba", "in_dt"): (None, "model"),
+    ("mamba", "conv_w"): (None, None),
+    ("mamba", "conv_b"): (None,),
+    ("mamba", "dt_bias"): ("model",),
+    ("mamba", "A_log"): ("model",),
+    ("mamba", "D"): ("model",),
+    ("mamba", "out"): ("model", None),
+    ("cross", "kv_proj"): (None, None),
+    (None, "gate_mlp"): (),
+    (None, "scale"): (None,),  # all norm scales, incl. mamba gated norm
+}
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+    return out
+
+
+def _match(path_names: list[str], leaf_ndim: int):
+    leaf = path_names[-1]
+    parent = path_names[-2] if len(path_names) > 1 else None
+    for key in ((parent, leaf), (None, leaf)):
+        if key in _PARAM_RULES:
+            trailing = _PARAM_RULES[key]
+            pad = leaf_ndim - len(trailing)
+            if pad < 0:
+                continue
+            return (None,) * pad + tuple(trailing)
+    # mamba norm scale lives at ('mamba','norm','scale'): parent='norm'
+    if leaf == "scale":
+        return (None,) * (leaf_ndim - 1) + (None,)
+    return (None,) * leaf_ndim
+
+
+def param_specs(params) -> Any:
+    """PartitionSpec pytree matching `params` (shapes or arrays)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        names = _path_names(path)
+        ndim = len(getattr(leaf, "shape", ()))
+        specs.append(P(*_match(names, ndim)))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def sanitize_spec(spec: P, shape: tuple, mesh: Mesh) -> P:
+    """Make a spec legal for `shape` on `mesh`: any sharded dim must divide.
+
+    If the preferred dim doesn't divide (e.g. kv_heads=2 on a 16-way model
+    axis), relocate the axis to the LAST other dim that divides (head_dim,
+    then d_model) — the Megatron GQA-replication fallback — else replicate.
+    """
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (e, d) in enumerate(zip(entries, shape)):
+        if e is None:
+            continue
+        names = e if isinstance(e, tuple) else (e,)
+        n = math.prod(mesh.shape[a] for a in names if a in mesh.axis_names)
+        if n <= 1:
+            continue
+        if d % n == 0 and d >= n:
+            continue
+        entries[i] = None
+        for j in range(len(shape) - 1, 0, -1):  # never the leading scan dim
+            if j == i or entries[j] is not None:
+                continue
+            if shape[j] % n == 0 and shape[j] >= n:
+                entries[j] = e
+                break
+    return P(*entries)
+
+
+def sanitize_specs(spec_tree, shape_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s, sh: sanitize_spec(s, sh.shape, mesh),
+        spec_tree, shape_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def zero_spec(spec: P, shape: tuple, mesh: Mesh,
+              axes: tuple = ("data",)) -> P:
+    """ZeRO: additionally shard an (optimizer-state) tensor over data axes.
+
+    Picks the first dimension that is currently unsharded and divisible by
+    the data-axis extent; falls back to the original spec.
+    """
+    usable = tuple(a for a in axes if a in mesh.axis_names)
+    if not usable:
+        return spec
+    n = math.prod(mesh.shape[a] for a in usable)
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    # already ZeRO/FSDP-sharded over (any of) these axes -> no-op
+    used = set()
+    for e in entries:
+        if e is not None:
+            used |= set(e if isinstance(e, tuple) else (e,))
+    if used & set(usable):
+        return P(*entries)
+    for i, (dim, entry) in enumerate(zip(shape, entries)):
+        if entry is None and dim % n == 0 and dim >= n:
+            entries[i] = usable if len(usable) > 1 else usable[0]
+            return P(*entries)
+    return spec
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def shaped_with_sharding(shape_tree, spec_tree, mesh: Mesh, dtype_tree=None):
+    """ShapeDtypeStructs carrying shardings (dry-run inputs)."""
+    def mk(leaf, spec):
+        return jax.ShapeDtypeStruct(
+            leaf.shape, leaf.dtype, sharding=NamedSharding(mesh, spec))
+    return jax.tree.map(mk, shape_tree, spec_tree,
+                        is_leaf=lambda x: isinstance(x, P) or hasattr(x, "shape"))

@@ -1,0 +1,1 @@
+from repro.runtime.train import RunConfig, Trainer, make_train_step  # noqa: F401

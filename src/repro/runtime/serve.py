@@ -1,0 +1,79 @@
+"""Serving runtime: batched prefill + decode with KV caches, FLARE hooks."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ModelConfig
+from repro.models.layers import Policy
+from repro.models.registry import build_model
+
+
+@dataclass
+class ServeConfig:
+    model: ModelConfig
+    batch: int = 4
+    max_seq: int = 256
+    compute_dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    seed: int = 0
+    flare: bool = True
+
+    def policy(self) -> Policy:
+        return Policy(jnp.dtype(self.param_dtype),
+                      jnp.dtype(self.compute_dtype))
+
+
+class Server:
+    def __init__(self, cfg: ServeConfig, params=None):
+        self.cfg = cfg
+        self.model = build_model(cfg.model, policy=cfg.policy())
+        self.params = params if params is not None else self.model.init(
+            jax.random.PRNGKey(cfg.seed))
+        self._prefill = jax.jit(self.model.prefill)
+        self._decode = jax.jit(self.model.decode_step, donate_argnums=(2,))
+        self.daemon = None
+        if cfg.flare:
+            from repro.core.daemon import DaemonConfig, TracingDaemon
+            self.daemon = TracingDaemon(DaemonConfig(
+                rank=0, backend=f"{cfg.model.family}-serve",
+                hang_timeout=300.0)).attach()
+
+    def close(self):
+        if self.daemon:
+            self.daemon.detach()
+
+    # ------------------------------------------------------------------ #
+    def generate(self, prompts: np.ndarray, new_tokens: int = 16,
+                 vision_embeds=None) -> np.ndarray:
+        """prompts [B, S0] int32 -> [B, S0+new_tokens]."""
+        cfg = self.cfg
+        B, S0 = prompts.shape
+        cache = self.model.init_cache(B, cfg.max_seq)
+        kw = {}
+        if cfg.model.family == "vlm":
+            kw["vision_embeds"] = (vision_embeds if vision_embeds is not None
+                                   else jnp.ones((B, cfg.model.vision_tokens,
+                                                  cfg.model.vision_d),
+                                                 jnp.bfloat16))
+        if self.daemon:
+            self.daemon.step_begin(0)
+        logits, cache = self._prefill(self.params, jnp.asarray(prompts),
+                                      cache, **kw)
+        out = [np.asarray(prompts)]
+        tok = jnp.argmax(logits, axis=-1)[:, None]
+        for i in range(new_tokens):
+            if self.daemon:
+                self.daemon.step_begin(i + 1)
+            out.append(np.asarray(tok))
+            logits, cache = self._decode(self.params, tok, cache,
+                                         jnp.int32(S0 + i))
+            tok = jnp.argmax(logits, axis=-1)[:, None]
+            if self.daemon:
+                self.daemon.step_end(tokens=B)
+        return np.concatenate(out, axis=1)

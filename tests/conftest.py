@@ -1,0 +1,11 @@
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here — smoke tests must see the real single device.
+# Multi-device sharding tests run in subprocesses that set the flag
+# themselves (see test_multidevice.py).
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

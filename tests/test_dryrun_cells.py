@@ -1,0 +1,36 @@
+"""Dry-run smoke: two fast cells must lower+compile on BOTH production
+meshes in a subprocess (512 forced devices stay out of this process)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(args, timeout=600):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args,
+         "--out", "/tmp/dryrun_pytest"],
+        env=env, cwd=ROOT, capture_output=True, text=True, timeout=timeout)
+
+
+@pytest.mark.parametrize("extra", [[], ["--multi-pod"]])
+def test_decode_cell_both_meshes(extra):
+    r = _run(["--arch", "qwen2-0.5b", "--shape", "decode_32k", *extra])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK " in r.stdout
+
+
+def test_hybrid_long_context_cell():
+    r = _run(["--arch", "mamba2-780m", "--shape", "long_500k"])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "dom=" in r.stdout
+
+
+def test_main_process_still_single_device():
+    import jax
+    assert jax.device_count() == 1

@@ -1,0 +1,133 @@
+"""End-to-end diagnostic-engine scenarios on the 32-rank cluster simulator:
+every paper anomaly class must be detected AND routed to the right team
+with no cross-firing (Table 1)."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.engine import DiagnosticEngine, EngineConfig
+from repro.core.history import HistoryStore
+from repro.core.timeline import ClusterSimulator, Injection, program_from_config
+
+N = 32
+
+
+@pytest.fixture(scope="module")
+def world():
+    cfg = get_config("llama-20b-paper")
+    prog = program_from_config(cfg, num_chips=N)
+    store = HistoryStore()
+    eng0 = DiagnosticEngine(
+        EngineConfig(backend="dense-train", num_ranks=N), store)
+    for seed in range(3):
+        sim = ClusterSimulator(N, prog, seed=seed)
+        eng0.ingest_all(sim.run(4))
+    eng0.learn_healthy()
+    return prog, store
+
+
+def _diagnose(world, injections, steps=6, seed=7, shapes=None):
+    prog, store = world
+    eng = DiagnosticEngine(EngineConfig(
+        backend="dense-train", num_ranks=N,
+        kernel_shapes=shapes or {}), store)
+    sim = ClusterSimulator(N, prog, seed=seed, injections=injections)
+    eng.ingest_all(sim.run(steps))
+    if sim.hang:
+        return [eng.diagnose_hang(sim.hang.stacks, sim.hang.ring_progress)]
+    return eng.evaluate_all()
+
+
+def test_healthy_clean(world):
+    assert _diagnose(world, []) == []
+
+
+def test_gc_stall_routed_to_algorithm(world):
+    a = _diagnose(world, [Injection(kind="gc", duration=0.02, period_ops=5)])
+    hit = [x for x in a if x.metric == "issue_latency"]
+    assert hit and all(x.team.value == "algorithm" for x in hit)
+    assert any("GC" in x.root_cause for x in hit)
+
+
+def test_sync_stall_detected(world):
+    a = _diagnose(world, [Injection(kind="sync_after_comm")])
+    hit = [x for x in a if x.metric == "issue_latency"]
+    assert hit and "synchronization" in hit[0].root_cause
+
+
+def test_case3_dataloader_v_inter(world):
+    a = _diagnose(world, [Injection(kind="slow_dataloader", factor=1.0,
+                                    duration=2.0)])
+    assert any(x.metric == "v_inter" and x.team.value == "algorithm"
+               for x in a)
+    assert not any(x.team.value == "infrastructure" for x in a)
+
+
+def test_table5_minority_kernels(world):
+    a = _diagnose(world, [Injection(kind="minority_kernels", factor=0.35)])
+    assert any(x.metric == "v_minority"
+               and x.team.value == "infrastructure" for x in a)
+    assert not any(x.metric == "issue_latency" for x in a)
+
+
+def test_failslow_underclock_routed_to_ops(world):
+    a = _diagnose(world, [Injection(kind="underclock", ranks=(5,),
+                                    factor=2.5, start_step=3)])
+    hit = [x for x in a if x.kind == "fail_slow"]
+    assert hit and 5 in hit[0].ranks
+    assert not any(x.kind == "regression" for x in a)
+
+
+def test_failslow_network_jitter(world):
+    a = _diagnose(world, [Injection(kind="network_jitter", factor=3.0,
+                                    start_step=3)])
+    assert any(x.kind == "fail_slow" and x.metric == "bandwidth" for x in a)
+    assert not any(x.kind == "regression" for x in a)
+
+
+def test_case2_flops_layout_advice(world):
+    shapes = {f"ffn_matmul[{g}]": (8192, 8484) for g in range(8)}
+    a = _diagnose(world, [Injection(kind="slow_compute",
+                                    op_match="ffn_matmul", factor=2.88)],
+                  shapes=shapes)
+    hit = [x for x in a if x.metric == "flops"]
+    assert hit and "pad" in hit[0].root_cause
+    assert hit[0].evidence["layout_advice"]["padded_dims"] == [8512]
+
+
+def test_comm_hang_o1_inspection(world):
+    a = _diagnose(world, [Injection(kind="hang", ranks=(11,), at_step=2)])
+    assert a[0].kind == "hang"
+    assert a[0].metric == "intra_kernel_inspecting"
+    assert 11 in a[0].ranks
+
+
+def test_noncomm_hang_stack_analysis(world):
+    a = _diagnose(world, [Injection(kind="hang", ranks=(3,), at_step=2,
+                                    at_op=0,
+                                    meta={"noncomm_crash": True})])
+    assert a[0].metric == "call_stack_analysis" and a[0].ranks == [3]
+
+
+def test_paper_accuracy_batch(world):
+    """113-job style batch: healthy + injected; measure FP/TP (paper §7.3:
+    9 TP, 2 FP over 113 jobs)."""
+    prog, store = world
+    tp = fp = fn = 0
+    for seed in range(8):
+        a = _diagnose(world, [], seed=100 + seed, steps=4)
+        fp += 1 if any(x.kind == "regression" for x in a) else 0
+    regressions = [
+        [Injection(kind="gc", duration=0.02, period_ops=5)],
+        [Injection(kind="sync_after_comm")],
+        [Injection(kind="minority_kernels", factor=0.4)],
+        [Injection(kind="slow_dataloader", duration=2.5)],
+    ]
+    for seed, inj in enumerate(regressions):
+        a = _diagnose(world, inj, seed=200 + seed)
+        if any(x.kind == "regression" for x in a):
+            tp += 1
+        else:
+            fn += 1
+    assert fp == 0, "healthy runs must not raise regressions"
+    assert tp == len(regressions) and fn == 0

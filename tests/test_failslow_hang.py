@@ -1,0 +1,40 @@
+"""Fail-slow monitor + hang call-stack classification units."""
+import numpy as np
+
+from repro.core.failslow import ThroughputMonitor, binary_search_plan
+from repro.core.hang import classify_stacks, diagnose_hang
+
+
+def test_throughput_monitor_detects_sudden_drop():
+    m = ThroughputMonitor(window=6, drop_threshold=0.1)
+    for _ in range(8):
+        assert m.observe(100.0) is None
+    drop = m.observe(70.0)
+    assert drop is not None and abs(drop - 0.3) < 1e-9
+    # regression-like uniformly-slow job never fires
+    m2 = ThroughputMonitor(window=6, drop_threshold=0.1)
+    for _ in range(10):
+        assert m2.observe(60.0) is None
+
+
+def test_binary_search_plan_depth():
+    plan = binary_search_plan(1024)
+    assert len(plan) <= 11  # log2 depth
+
+
+def test_classify_noncomm():
+    stacks = {0: ["train", "dataloader", "os.read"],
+              **{r: ["train", "allreduce[3]"] for r in range(1, 8)}}
+    kind, suspects = classify_stacks(stacks)
+    assert kind == "non_comm" and suspects == [0]
+
+
+def test_classify_comm_and_diagnose():
+    stacks = {r: ["train", "all_gather[1]"] for r in range(8)}
+    kind, suspects = classify_stacks(stacks)
+    assert kind == "comm"
+    progress = np.array([9, 9, 9, 4, 9, 9, 9, 9])  # rank 3 stalled first
+    d = diagnose_hang(stacks, progress)
+    assert d.used_inspector and d.link == (2, 3)
+    d2 = diagnose_hang(stacks, None)
+    assert not d2.used_inspector and "probe" in d2.detail

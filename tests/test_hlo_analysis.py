@@ -1,0 +1,71 @@
+"""Scan-aware HLO analyzer: trip-count multiplication vs unrolled truth."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analysis import HloAnalysis, analyze_hlo
+
+
+def _compile(fn, *specs):
+    return jax.jit(fn).lower(*specs).compile()
+
+
+def test_scan_flops_match_unrolled():
+    def body(x, _):
+        return jnp.dot(x, x) + 1.0, None
+
+    def scanned(x):
+        y, _ = jax.lax.scan(body, x, None, length=12)
+        return jnp.sum(y)
+
+    def unrolled(x):
+        for _ in range(12):
+            x = jnp.dot(x, x) + 1.0
+        return jnp.sum(x)
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    fs = analyze_hlo(_compile(scanned, x).as_text())["flops"]
+    fu = analyze_hlo(_compile(unrolled, x).as_text())["flops"]
+    assert fs == fu == pytest.approx(12 * 2 * 128 ** 3)
+
+
+def test_nested_scan_multiplies():
+    def inner(x, _):
+        return jnp.dot(x, x), None
+
+    def outer(x, _):
+        y, _ = jax.lax.scan(inner, x, None, length=3)
+        return y, None
+
+    def fn(x):
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return jnp.sum(y)
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    f = analyze_hlo(_compile(fn, x).as_text())["flops"]
+    assert f == pytest.approx(15 * 2 * 64 ** 3)
+
+
+def test_traffic_scales_with_trip_count():
+    def body(x, _):
+        return x * 2.0 + 1.0, None
+
+    def fn(x):
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    x = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    t = analyze_hlo(_compile(fn, x).as_text())["traffic_bytes"]
+    one_pass = 1024 * 1024 * 4
+    assert t >= 10 * one_pass  # at least read+write per iteration
+    assert t <= 80 * one_pass
+
+
+def test_dot_flops_from_contracting_dims():
+    def fn(a, b):
+        return jnp.einsum("bik,bkj->bij", a, b)
+
+    a = jax.ShapeDtypeStruct((4, 32, 64), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 64, 16), jnp.float32)
+    f = analyze_hlo(_compile(fn, a, b).as_text())["flops"]
+    assert f == pytest.approx(2 * 4 * 32 * 16 * 64)

@@ -1,0 +1,52 @@
+"""O(1) intra-kernel inspecting: exactness + cost-model properties."""
+import numpy as np
+import pytest
+
+from repro.core.inspecting import (diagnose_ring, inspect_cost_model,
+                                   probe_search_cost)
+from repro.core.timeline import ClusterSimulator, Injection, SimOp
+
+
+def _sim_progress(n, fault, s0=7, fifo=2, total=None):
+    """Use the simulator's hang model to produce ring progress."""
+    prog = [SimOp("allreduce[0]", "comm", 1e-3, bytes=1024)]
+    sim = ClusterSimulator(n, prog, injections=[
+        Injection(kind="hang", ranks=(fault,), at_step=0,
+                  meta={"frozen_at": s0, "fifo_depth": fifo})],
+        ring_total_steps=total or 2 * (n - 1))
+    sim.run(1)
+    return sim.hang.ring_progress
+
+
+@pytest.mark.parametrize("n", [4, 16, 64, 256, 1024])
+def test_ring_diagnosis_localizes_fault(n):
+    for fault in {0, 1, n // 2, n - 1}:
+        progress = _sim_progress(n, fault)
+        d = diagnose_ring(progress)
+        assert fault in d.machines, (n, fault, d)
+        assert d.link == (fault, (fault + 1) % n)
+
+
+def test_inspect_cost_constant_in_cluster_size():
+    c1 = inspect_cost_model(16)
+    c2 = inspect_cost_model(4096)
+    assert c1 == c2  # O(1)
+    # paper Fig 10 band: 29.4 - 309.2 s
+    for proto in ("SIMPLE", "LL128", "LL"):
+        for inter in (True, False):
+            c = inspect_cost_model(1024, proto, inter)
+            assert 20.0 <= c <= 320.0
+
+
+def test_probe_search_grows_and_exceeds_30min_at_scale():
+    small = probe_search_cost(64)
+    big = probe_search_cost(4096)
+    assert big > small
+    assert probe_search_cost(2048) >= 1800.0  # paper: >= 30 min
+    assert inspect_cost_model(2048) <= 310.0  # paper: <= ~5 min
+
+
+def test_multi_min_progress_low_confidence():
+    p = np.array([5, 5, 9, 9])
+    d = diagnose_ring(p)
+    assert d.confidence == "review"

@@ -1,0 +1,72 @@
+"""Aggregated metrics ①-⑤ on hand-built event timelines."""
+import numpy as np
+
+from repro.core.events import EventKind, TraceEvent
+from repro.core.metrics import aggregate_step
+
+
+def _ev(kind, name, rank, i, s, e, **meta):
+    return TraceEvent(kind, name, rank, i, s, e, step=0, meta=meta)
+
+
+def test_throughput_and_voids():
+    # rank timeline: dataloader [0,1], kernels [1,2],[2,3],[4,5] (gap 3-4
+    # with next issued at 2.5 -> minority), step [0,6]
+    evs = {0: [
+        _ev(EventKind.STEP, "step_0", 0, 0, 0, 6.0, tokens=600),
+        _ev(EventKind.DATALOADER, "dl", 0, 0.0, 0.0, 1.0, tokens=600),
+        _ev(EventKind.KERNEL_COMPUTE, "a", 0, 0.9, 1.0, 2.0, flops=100.0),
+        _ev(EventKind.KERNEL_COMPUTE, "b", 0, 1.0, 2.0, 3.0, flops=100.0),
+        _ev(EventKind.KERNEL_COMPUTE, "c", 0, 2.5, 4.0, 5.0, flops=100.0),
+    ]}
+    m = aggregate_step(evs, 0)
+    assert m.throughput == 100.0  # 600 tokens / 6 s
+    assert m.t_inter == 1.0  # dataloader gap
+    assert abs(m.v_inter - 1.0 / 6.0) < 1e-9
+    # minority gap: [3,4] with c issued at 2.5 <= 3.0
+    assert abs(m.v_minority - 1.0 / 5.0) < 1e-9
+    assert m.flops["a"][0] == 100.0
+
+
+def test_issue_stall_gap_not_minority():
+    # gap caused by LATE ISSUE (issue 3.5 > prev end 3.0) is NOT minority
+    evs = {0: [
+        _ev(EventKind.STEP, "step_0", 0, 0, 0, 6.0, tokens=60),
+        _ev(EventKind.KERNEL_COMPUTE, "a", 0, 0.5, 1.0, 3.0, flops=1.0),
+        _ev(EventKind.KERNEL_COMPUTE, "b", 0, 3.5, 4.0, 5.0, flops=1.0),
+    ]}
+    m = aggregate_step(evs, 0)
+    assert m.v_minority == 0.0
+    assert m.issue_latencies.size == 0  # no comm kernels
+
+
+def test_bandwidth_last_issuer():
+    # paper: bandwidth uses the LAST-starting rank's start timestamp
+    evs = {
+        0: [_ev(EventKind.KERNEL_COMM, "ar", 0, 0.0, 2.0, 4.0, bytes=8e9)],
+        1: [_ev(EventKind.KERNEL_COMM, "ar", 1, 1.9, 2.0, 4.0, bytes=8e9)],
+    }
+    m = aggregate_step(evs, 0)
+    assert abs(m.bandwidth["ar"] - 8e9 / 2.0) < 1e-6
+    assert m.issue_latencies.size == 2
+
+
+def test_overlap_flagging():
+    # compute kernel overlapped >50% by comm must be excluded from FLOPS
+    evs = {0: [
+        _ev(EventKind.KERNEL_COMPUTE, "mm", 0, 0.0, 1.0, 3.0, flops=10.0),
+        _ev(EventKind.KERNEL_COMM, "a2a", 0, 0.0, 1.5, 3.0, bytes=100),
+    ]}
+    m = aggregate_step(evs, 0)
+    assert "mm" in m.flops_overlapped
+
+
+def test_api_span_accumulation():
+    evs = {0: [
+        _ev(EventKind.GC, "gc.collect", 0, 0.0, 0.0, 0.5),
+        _ev(EventKind.GC, "gc.collect", 0, 1.0, 1.0, 1.5),
+        _ev(EventKind.SYNC, "sync", 0, 2.0, 2.0, 2.1),
+    ]}
+    m = aggregate_step(evs, 0)
+    assert abs(m.api_spans["gc.collect"] - 1.0) < 1e-9
+    assert abs(m.api_spans["sync"] - 0.1) < 1e-9

@@ -1,0 +1,58 @@
+"""Optimizer: convergence across state dtypes, quantizer bounds, ZeRO specs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.adamw import (AdamWConfig, _q_dec, _q_enc, adamw_init,
+                               adamw_update)
+from repro.optim.schedule import warmup_cosine
+
+
+@pytest.mark.parametrize("sd", ["float32", "bfloat16", "int8"])
+def test_adamw_converges_quadratic(sd):
+    cfg = AdamWConfig(lr=0.1, state_dtype=sd, weight_decay=0.0)
+    params = {"w": jnp.array([[3.0, -2.0, 1.5]] * 5), "b": jnp.float32(4.0)}
+    state = adamw_init(params, cfg)
+    for _ in range(250):
+        g = jax.tree.map(lambda w: 2 * w, params)
+        params, state, _ = adamw_update(g, state, params, cfg, 0.05)
+    assert float(jnp.abs(params["w"]).max()) < 0.06
+    assert abs(float(params["b"])) < 0.06
+
+
+def test_grad_clip_reported():
+    cfg = AdamWConfig(lr=0.1, grad_clip=1.0)
+    params = {"w": jnp.ones(4)}
+    state = adamw_init(params, cfg)
+    g = {"w": jnp.full(4, 100.0)}
+    _, _, m = adamw_update(g, state, params, cfg, 0.1)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_quantizer_roundtrip_bound(rng):
+    x = jnp.asarray(rng.standard_normal((7, 300)) * 5, jnp.float32)
+    dec = _q_dec(_q_enc(x), x.shape)
+    err = np.abs(np.asarray(dec - x))
+    bound = np.abs(np.asarray(x)).max() / 127.0 + 1e-6
+    assert err.max() <= bound * 1.01
+
+
+def test_quantizer_preserves_shape(rng):
+    for shape in [(5,), (3, 4), (2, 3, 257), ()]:
+        x = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+        enc = _q_enc(x)
+        if shape:
+            assert enc["q"].shape == shape
+        dec = _q_dec(enc, shape if shape else (1,))
+        assert dec.shape == (shape if shape else (1,))
+
+
+def test_warmup_cosine_shape():
+    lrs = [float(warmup_cosine(s, peak_lr=1.0, warmup_steps=10,
+                               total_steps=100)) for s in range(100)]
+    assert lrs[0] == 0.0
+    assert max(lrs) == pytest.approx(1.0)
+    assert lrs[5] < lrs[9]  # warming up
+    assert lrs[99] < lrs[50]  # decaying
+    assert lrs[99] >= 0.1  # min ratio floor

@@ -1,0 +1,94 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from scipy.stats import wasserstein_distance
+
+from repro.core.events import EventKind, TraceEvent
+from repro.core.inspecting import diagnose_ring
+from repro.core.stack import reconstruct_stacks
+from repro.core.wasserstein import w1_distance
+from repro.data.masks import (mask_fast_linear, mask_naive_quadratic,
+                              materialize_from_starts, segment_ids_from_docs)
+from repro.optim.adamw import _q_dec, _q_enc
+
+finite = st.floats(-1e6, 1e6, allow_nan=False, width=32)
+
+
+@given(st.lists(finite, min_size=1, max_size=60),
+       st.lists(finite, min_size=1, max_size=60))
+@settings(max_examples=60, deadline=None)
+def test_w1_matches_scipy(a, b):
+    ours = w1_distance(a, b)
+    ref = wasserstein_distance(a, b)
+    assert abs(ours - ref) <= 1e-6 * max(1.0, abs(ref))
+
+
+@given(st.lists(finite, min_size=1, max_size=40))
+@settings(max_examples=30, deadline=None)
+def test_w1_identity_and_symmetry(a):
+    b = [x + 1.0 for x in a]
+    assert w1_distance(a, a) == 0.0
+    assert abs(w1_distance(a, b) - w1_distance(b, a)) < 1e-9
+
+
+@given(st.integers(3, 200), st.integers(0, 199), st.integers(0, 50),
+       st.integers(1, 4))
+@settings(max_examples=80, deadline=None)
+def test_ring_diagnosis_always_contains_fault(n, fault, s0, fifo):
+    fault = fault % n
+    total = 2 * (n - 1)
+    s0 = min(s0, max(total - fifo - 1, 0))
+    progress = np.zeros(n, np.int64)
+    for d in range(n):
+        r = (fault + d) % n
+        if d == 0:
+            progress[r] = min(s0 + fifo, total)
+        elif d == 1:
+            progress[r] = s0
+        else:
+            progress[r] = min(s0 + min(d - 1, fifo), total)
+    d = diagnose_ring(progress)
+    assert fault in d.machines
+
+
+@given(st.lists(st.integers(1, 20), min_size=1, max_size=6))
+@settings(max_examples=40, deadline=None)
+def test_mask_generators_equivalent(doc_lens):
+    L = sum(doc_lens)
+    seg = segment_ids_from_docs(doc_lens, L)
+    np.testing.assert_array_equal(
+        mask_naive_quadratic(seg),
+        materialize_from_starts(mask_fast_linear(seg)))
+
+
+@given(st.lists(finite, min_size=1, max_size=600))
+@settings(max_examples=40, deadline=None)
+def test_int8_quantizer_error_bound(xs):
+    import jax.numpy as jnp
+    x = jnp.asarray(np.asarray(xs, np.float32).reshape(1, -1))
+    dec = _q_dec(_q_enc(x), x.shape)
+    bound = float(np.abs(xs).max()) / 127.0 + 1e-5
+    assert float(np.abs(np.asarray(dec) - np.asarray(x)).max()) <= \
+        bound * 1.02
+
+
+@given(st.lists(st.tuples(st.floats(0, 100, allow_nan=False),
+                          st.floats(0.001, 10, allow_nan=False)),
+                min_size=1, max_size=40))
+@settings(max_examples=40, deadline=None)
+def test_stack_reconstruction_well_nested(spans):
+    """For arbitrary span sets, every event's callpath prefix chain exists
+    and parents always contain children (issue-time containment)."""
+    evs = []
+    for i, (start, dur) in enumerate(spans):
+        evs.append(TraceEvent(EventKind.PY_API, f"s{i}", 0,
+                              start, start, start + dur))
+    reconstruct_stacks(evs)
+    by_name = {e.name: e for e in evs}
+    for e in evs:
+        parent = e.meta.get("parent")
+        if parent is None:
+            continue
+        p = by_name[parent]
+        assert p.issue_ts <= e.issue_ts + 1e-9
+        assert p.end_ts >= e.issue_ts - 1e-9

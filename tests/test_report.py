@@ -1,0 +1,33 @@
+"""Reports + ASCII timeline rendering."""
+from repro.core.engine import Anomaly, Team
+from repro.core.events import EventKind, TraceEvent
+from repro.core.report import anomalies_json, anomaly_report, ascii_timeline
+
+
+def test_anomaly_report_groups_by_team():
+    an = [
+        Anomaly(kind="regression", metric="issue_latency",
+                team=Team.ALGORITHM, root_cause="python runtime GC",
+                step=4, severity=3.2, evidence={"w1": 0.5}),
+        Anomaly(kind="hang", metric="intra_kernel_inspecting",
+                team=Team.OPERATIONS, root_cause="link 3->4", ranks=[3, 4]),
+    ]
+    txt = anomaly_report(an)
+    assert "ALGORITHM" in txt and "OPERATIONS" in txt
+    assert "GC" in txt
+    js = anomalies_json(an)
+    assert "issue_latency" in js
+
+
+def test_ascii_timeline_lanes():
+    evs = [
+        TraceEvent(EventKind.STEP, "step_0", 0, 0.0, 0.0, 1.0, step=0),
+        TraceEvent(EventKind.DATALOADER, "dl", 0, 0.0, 0.0, 0.2, step=0),
+        TraceEvent(EventKind.GC, "gc", 0, 0.3, 0.3, 0.4, step=0),
+        TraceEvent(EventKind.KERNEL_COMPUTE, "mm", 0, 0.2, 0.4, 0.7, step=0),
+        TraceEvent(EventKind.KERNEL_COMM, "ar", 0, 0.5, 0.7, 0.95, step=0),
+    ]
+    txt = ascii_timeline(evs, rank=0, step=0, width=60)
+    assert "CPU |" in txt and "DEV |" in txt
+    assert "#" in txt and "~" in txt and "G" in txt and "D" in txt
+    assert ascii_timeline([], 0, 0) == "(no events)"

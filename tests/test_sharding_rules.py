@@ -1,0 +1,61 @@
+"""Parameter spec rules, divisibility sanitizer, ZeRO spec behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_reduced
+from repro.models import build_model
+from repro.parallel.sharding import param_specs, sanitize_spec, zero_spec
+
+
+class FakeMesh:
+    axis_names = ("pod", "data", "model")
+    shape = {"pod": 2, "data": 16, "model": 16}
+
+
+MESH = FakeMesh()
+
+
+def test_param_specs_rules():
+    cfg = get_reduced("dbrx-132b")
+    m = build_model(cfg)
+    p = m.init(jax.random.PRNGKey(0))
+    specs = param_specs(p)
+    assert specs["embed"]["embedding"] == P("model", None)
+    assert specs["head"]["w"] == P(None, "model")
+    assert specs["layers"]["attn"]["wq"] == P(None, None, "model", None)
+    assert specs["layers"]["moe"]["wi_gate"] == P(None, "model", None, None)
+    assert specs["layers"]["ln1"]["scale"] == P(None, None)
+
+
+def test_sanitize_relocates_model_axis():
+    # kv_heads=2 cannot shard 16 ways -> relocate to head_dim=64
+    s = sanitize_spec(P(None, "model", None), (24, 2, 64), MESH)
+    assert s == P(None, None, "model")
+    # nothing divisible -> replicate
+    s = sanitize_spec(P("model",), (6,), MESH)
+    assert s == P(None,)
+    # already fine -> unchanged
+    s = sanitize_spec(P(None, "model"), (10, 32), MESH)
+    assert s == P(None, "model")
+    # never relocate onto the leading (scan) dim
+    s = sanitize_spec(P(None, "model"), (32, 6), MESH)
+    assert s == P(None, None)
+
+
+def test_zero_spec_adds_data_once():
+    s = zero_spec(P(None, "model"), (64, 32), MESH, axes=("data",))
+    assert s == P("data", "model")
+    # idempotent: never duplicates the data axis
+    s2 = zero_spec(s, (64, 32), MESH, axes=("data",))
+    assert s2 == s
+    # skips non-divisible dims
+    s3 = zero_spec(P(None, None), (6, 32), MESH, axes=("data",))
+    assert s3 == P(None, "data")
+
+
+def test_zero_spec_multi_axis():
+    s = zero_spec(P(None, None), (64, 7), MESH, axes=("pod", "data"))
+    assert s == P(("pod", "data"), None)

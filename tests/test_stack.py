@@ -1,0 +1,33 @@
+"""Stack reconstruction: interval containment -> call paths."""
+from repro.core.events import EventKind, TraceEvent
+from repro.core.stack import reconstruct_stacks
+
+
+def _ev(kind, name, i, s, e, rank=0):
+    return TraceEvent(kind, name, rank, i, s, e, step=0)
+
+
+def test_nesting():
+    evs = [
+        _ev(EventKind.STEP, "step", 0.0, 0.0, 10.0),
+        _ev(EventKind.PY_API, "outer", 1.0, 1.0, 6.0),
+        _ev(EventKind.PY_API, "inner", 2.0, 2.0, 3.0),
+        _ev(EventKind.KERNEL_COMPUTE, "mm", 2.5, 7.0, 8.0),  # issued in inner
+        _ev(EventKind.PY_API, "later", 7.0, 7.0, 8.0),
+    ]
+    reconstruct_stacks(evs)
+    by = {e.name: e for e in evs}
+    assert by["outer"].meta["callpath"] == "step/outer"
+    assert by["inner"].meta["callpath"] == "step/outer/inner"
+    # kernel nests where it was ISSUED, not where it executed
+    assert by["mm"].meta["callpath"] == "step/outer/inner/mm"
+    assert by["later"].meta["callpath"] == "step/later"
+
+
+def test_per_rank_isolation():
+    evs = [
+        _ev(EventKind.STEP, "s0", 0.0, 0.0, 10.0, rank=0),
+        _ev(EventKind.PY_API, "a", 1.0, 1.0, 2.0, rank=1),
+    ]
+    reconstruct_stacks(evs)
+    assert evs[1].meta["callpath"] == "a"  # rank 1 has no enclosing span

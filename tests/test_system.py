@@ -1,0 +1,72 @@
+"""End-to-end system behaviour: real training with the FLARE daemon
+attached, loss decreasing, trace log emitted, and the Case-3 dataloader
+regression visible in REAL (not simulated) events."""
+import os
+import tempfile
+
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.core.events import load_jsonl
+from repro.core.metrics import aggregate_step, steps_in
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.serve import ServeConfig, Server
+from repro.runtime.train import RunConfig, Trainer
+
+
+def _train_with_log(log_path, *, steps=10, mask_mode="none", seq=64,
+                    lr=1e-3, prefetch=True):
+    cfg = get_reduced("llama3.2-1b")
+    run = RunConfig(model=cfg, global_batch=4, seq_len=seq, steps=steps,
+                    peak_lr=lr, warmup_steps=5, opt=AdamWConfig(lr=lr),
+                    flare=True, mask_mode=mask_mode, flare_log=log_path,
+                    data_prefetch=prefetch)
+    t = Trainer(run)
+    hist = t.train()
+    return t, hist
+
+
+def test_train_loss_decreases_with_flare(tmp_path):
+    log = str(tmp_path / "trace.jsonl")
+    t, hist = _train_with_log(log, steps=30, lr=3e-3)
+    first = np.mean([h["loss"] for h in hist[:5]])
+    last = np.mean([h["loss"] for h in hist[-5:]])
+    assert last < first - 0.2, (first, last)
+    # trace log exists, is small (paper: ~1.5MB/GPU on a real job), and
+    # contains step + dataloader + device events
+    assert 0 < t.daemon.bytes_logged < 5e6
+    events = load_jsonl(log)
+    kinds = {e.kind.value for e in events}
+    assert {"step", "dataloader", "k_comp"} <= kinds
+
+
+def test_case3_v_inter_from_real_events(tmp_path):
+    """naive O(L^2) mask generation must raise v_inter vs the fast path.
+
+    Paper §7.3.3: at 64k the quadratic mask generation exceeded the step
+    time — prefetch cannot hide it.  We reproduce the regime with a long
+    seq relative to the (reduced) model and a synchronous loader."""
+    def v_inter_for(mask_mode):
+        log = str(tmp_path / f"{mask_mode}.jsonl")
+        _train_with_log(log, steps=6, mask_mode=mask_mode, seq=512,
+                        prefetch=False)
+        events = load_jsonl(log)
+        by_rank = {0: events}
+        vs = [aggregate_step(by_rank, s).v_inter
+              for s in steps_in(by_rank)[2:]]
+        return float(np.mean(vs))
+
+    v_fast = v_inter_for("fast")
+    v_naive = v_inter_for("naive")
+    assert v_naive > 2.0 * v_fast, (v_fast, v_naive)
+    assert v_naive > 0.05, v_naive
+
+
+def test_serve_generates():
+    cfg = get_reduced("qwen2-0.5b")
+    server = Server(ServeConfig(model=cfg, batch=2, max_seq=64, flare=True))
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, (2, 16)).astype(np.int32)
+    out = server.generate(prompts, new_tokens=8)
+    assert out.shape == (2, 24)
+    server.close()

@@ -1,0 +1,93 @@
+"""Tracing daemon + interceptor unit tests."""
+import gc
+import json
+import os
+import time
+
+import pytest
+
+from repro.core.daemon import DaemonConfig, TracingDaemon
+from repro.core.events import (EventKind, EventRingBuffer, TraceEvent,
+                               load_jsonl)
+from repro.core.interceptor import parse_api_spec
+
+
+def test_parse_api_spec():
+    assert parse_api_spec("gc@collect, json@dumps") == [
+        ("gc", "collect"), ("json", "dumps")]
+    with pytest.raises(ValueError):
+        parse_api_spec("nodelimiter")
+
+
+def test_event_codec_roundtrip():
+    ev = TraceEvent(EventKind.KERNEL_COMM, "allreduce", 3, 1.0, 1.5, 2.0,
+                    step=7, meta={"bytes": 1024, "group": "dp"})
+    ev2 = TraceEvent.from_json(ev.to_json())
+    assert ev2.name == "allreduce" and ev2.rank == 3
+    assert ev2.issue_latency == pytest.approx(0.5)
+    assert ev2.meta["bytes"] == 1024
+
+
+def test_ring_buffer_overflow():
+    buf = EventRingBuffer(capacity=4)
+    for i in range(7):
+        buf.append(TraceEvent(EventKind.STEP, f"e{i}", 0, i, i, i + 1))
+    assert buf.dropped == 3
+    names = [e.name for e in buf.drain()]
+    assert names == ["e3", "e4", "e5", "e6"]
+    assert len(buf) == 0
+
+
+def test_daemon_traces_env_api_gc_and_kernels(tmp_path):
+    os.environ["FLARE_TRACED_PYTHON_API"] = "json@dumps"
+    try:
+        log = str(tmp_path / "t.jsonl")
+        d = TracingDaemon(DaemonConfig(rank=1, log_path=log,
+                                       drain_interval=0.01,
+                                       hang_timeout=1e9))
+        d.attach()
+        got = []
+        d.add_sink(lambda evs: got.extend(evs))
+        d.step_begin(0)
+        json.dumps([1, 2, 3])
+        gc.collect()
+
+        @d.register_kernel("k1", EventKind.KERNEL_COMPUTE,
+                           lambda x: {"flops": 10.0})
+        def op(x):
+            return x * 2
+
+        op(21)
+        d.step_end(tokens=64)
+        time.sleep(0.25)
+        d.detach()
+        kinds = {e.kind for e in got}
+        assert EventKind.GC in kinds
+        assert EventKind.STEP in kinds
+        assert any(e.name == "json@dumps" for e in got)
+        k = [e for e in got if e.name == "k1"]
+        assert k and k[0].meta["flops"] == 10.0
+        # kernel nests under the step span (stack reconstruction)
+        assert k[0].meta.get("parent") == "step_0"
+        # logged bytes and reload
+        assert d.bytes_logged > 0
+        reloaded = load_jsonl(log)
+        assert len(reloaded) == len(got)
+        # observer-effect guard: daemon's own json.dumps not traced
+        dumps_count = sum(1 for e in got if e.name == "json@dumps")
+        assert dumps_count == 1
+    finally:
+        del os.environ["FLARE_TRACED_PYTHON_API"]
+
+
+def test_daemon_hang_heartbeat():
+    d = TracingDaemon(DaemonConfig(rank=0, hang_timeout=0.05,
+                                   drain_interval=0.01))
+    d.attach()
+    reports = []
+    d.on_hang(reports.append)
+    d.step_begin(0)
+    d.set_stack(["train_step", "allreduce"])
+    time.sleep(0.3)
+    d.detach()
+    assert reports and reports[0]["stack"] == ["train_step", "allreduce"]

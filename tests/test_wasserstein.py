@@ -1,0 +1,32 @@
+"""W1 distance vs scipy + healthy-threshold learning."""
+import numpy as np
+import pytest
+from scipy.stats import wasserstein_distance
+
+from repro.core.wasserstein import healthy_threshold, normalized_w1, w1_distance
+
+
+@pytest.mark.parametrize("na,nb", [(100, 100), (100, 37), (8, 500)])
+def test_matches_scipy(rng, na, nb):
+    a = rng.standard_normal(na) * 3 + 1
+    b = rng.standard_normal(nb)
+    assert w1_distance(a, b) == pytest.approx(
+        wasserstein_distance(a, b), rel=1e-9)
+
+
+def test_identity_and_shift():
+    a = np.linspace(0, 1, 50)
+    assert w1_distance(a, a) == 0.0
+    assert w1_distance(a, a + 2.0) == pytest.approx(2.0)
+
+
+def test_healthy_threshold_margin(rng):
+    runs = [rng.uniform(0, 1, 200) for _ in range(4)]
+    thr = healthy_threshold(runs, margin=1.5)
+    # every healthy pair is under the threshold by construction
+    for i in range(4):
+        for j in range(4):
+            assert normalized_w1(runs[i], runs[j]) <= thr + 1e-12
+    # a stalled (compressed) distribution exceeds it
+    stalled = rng.uniform(0, 0.05, 200)
+    assert normalized_w1(stalled, np.concatenate(runs)) > thr
