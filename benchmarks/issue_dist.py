@@ -22,7 +22,7 @@ def _latencies(injections, seed=0, steps=3):
     cfg = get_config("llama-20b-paper")
     prog = program_from_config(cfg, num_chips=N)
     sim = ClusterSimulator(N, prog, seed=seed, injections=injections)
-    ev = sim.run(steps)
+    ev = sim.run_batch(steps)   # columnar: aggregate via vectorized sweep
     lats = []
     for s in steps_in(ev)[1:]:
         m = aggregate_step(ev, s)

@@ -51,7 +51,8 @@ def _world(backend="dense-train", seed0=0):
     store = HistoryStore()
     eng = DiagnosticEngine(EngineConfig(backend=backend, num_ranks=N), store)
     for s in range(3):
-        eng.ingest_all(ClusterSimulator(N, prog, seed=seed0 + s).run(4))
+        eng.ingest_batch(
+            ClusterSimulator(N, prog, seed=seed0 + s).run_batch(4))
     eng.learn_healthy()
     return prog, store
 
@@ -64,7 +65,7 @@ def main():
         eng = DiagnosticEngine(EngineConfig(
             backend="dense-train", num_ranks=N, kernel_shapes=shapes), store)
         sim = ClusterSimulator(N, prog, seed=50 + i, injections=inj)
-        eng.ingest_all(sim.run(7))
+        eng.ingest_batch(sim.run_batch(7))
         found = eng.evaluate_all()
         hit = any(a.kind == kind and a.metric == metric
                   and a.team.value == team for a in found)
@@ -78,7 +79,8 @@ def main():
     for s in range(n_healthy):
         eng = DiagnosticEngine(EngineConfig(
             backend="dense-train", num_ranks=N), store)
-        eng.ingest_all(ClusterSimulator(N, prog, seed=300 + s).run(5))
+        eng.ingest_batch(
+            ClusterSimulator(N, prog, seed=300 + s).run_batch(5))
         if any(a.kind == "regression" for a in eng.evaluate_all()):
             fp += 1
     emit("regression/summary", 0.0,
@@ -95,14 +97,14 @@ def main():
         sim = ClusterSimulator(N, vprog, seed=400 + s, injections=[
             Injection(kind="straggler",
                       ranks=tuple(range(0, N, 4)), factor=1.6)])
-        veng.ingest_all(sim.run(4))
+        veng.ingest_batch(sim.run_batch(4))
     veng.learn_healthy()
     eng = DiagnosticEngine(EngineConfig(backend="vlm-train", num_ranks=N),
                            store)
     sim = ClusterSimulator(N, vprog, seed=500, injections=[
         Injection(kind="straggler", ranks=tuple(range(0, N, 4)),
                   factor=1.6)])
-    eng.ingest_all(sim.run(5))
+    eng.ingest_batch(sim.run_batch(5))
     fps = [a for a in eng.evaluate_all() if a.kind == "regression"]
     emit("regression/vlm_imbalance_fp_fixed", 0.0,
          f"false_positive={bool(fps)};paper_fixed=True")

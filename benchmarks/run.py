@@ -5,6 +5,7 @@ Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/_util.emit).
   Fig 10  -> hang            Fig 11 -> issue_dist
   Table 4 -> regression      Fig 12 -> case2_matmul
   Table 5 -> vminority       §Roofline -> roofline (reads dryrun_out/)
+  §Scale  -> ingest (columnar pipeline throughput; BENCH_ingest.json)
 """
 from __future__ import annotations
 
@@ -13,7 +14,7 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (case2_matmul, hang, issue_dist, logsize,
+    from benchmarks import (case2_matmul, hang, ingest, issue_dist, logsize,
                             overhead, regression, roofline, vminority)
     sections = [
         ("fig8_overhead", overhead.main),
@@ -24,6 +25,7 @@ def main() -> None:
         ("fig12_case2", case2_matmul.main),
         ("table5_vminority", vminority.main),
         ("roofline", roofline.main),
+        ("scale_ingest", ingest.main),
     ]
     print("name,us_per_call,derived")
     failures = []

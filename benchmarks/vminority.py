@@ -28,7 +28,7 @@ def main():
     for name, frac in LADDER:
         sim = ClusterSimulator(N, prog, seed=3, injections=[
             Injection(kind="minority_kernels", factor=frac)])
-        ev = sim.run(3)
+        ev = sim.run_batch(3)   # columnar path
         vs, ts = [], []
         for s in steps_in(ev)[1:]:
             m = aggregate_step(ev, s)

@@ -31,7 +31,7 @@ def main():
                                           num_ranks=N), store)
     print(f"learning healthy profile from 2 runs x {N} ranks ...")
     for seed in range(2):
-        learn.ingest_all(ClusterSimulator(N, prog, seed=seed).run(3))
+        learn.ingest_batch(ClusterSimulator(N, prog, seed=seed).run_batch(3))
     prof = learn.learn_healthy()
     print(f"  W1 threshold={prof.issue_w1_threshold:.4f}  "
           f"V_inter thr={prof.v_inter_threshold:.3f}  "
@@ -40,8 +40,8 @@ def main():
     jobs = [
         ("job-1: python GC stalls",
          [Injection(kind="gc", duration=0.3, period_ops=4)]),
-        ("job-2: straggler GPU (rank 137 underclocked)",
-         [Injection(kind="underclock", ranks=(137,), factor=2.4,
+        ("job-2: straggler GPU (underclocked)",
+         [Injection(kind="underclock", ranks=(137 % N,), factor=2.4,
                     start_step=3)]),
         ("job-3: misaligned FFN after backend migration",
          [Injection(kind="slow_compute", op_match="ffn_matmul",
@@ -55,7 +55,7 @@ def main():
         eng = DiagnosticEngine(EngineConfig(
             backend="dense-train", num_ranks=N, kernel_shapes=shapes), store)
         sim = ClusterSimulator(N, prog, seed=77, injections=inj)
-        eng.ingest_all(sim.run(6))
+        eng.ingest_batch(sim.run_batch(6))
         if sim.hang:
             anomalies = [eng.diagnose_hang(sim.hang.stacks,
                                            sim.hang.ring_progress)]

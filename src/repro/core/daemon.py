@@ -52,6 +52,7 @@ class TracingDaemon:
         self.buffer = EventRingBuffer(self.cfg.buffer_capacity)
         self.interceptor = PyApiInterceptor(self._on_api_span, self._on_gc)
         self._sinks: list[Callable[[list[TraceEvent]], None]] = []
+        self._batch_sinks: list = []
         self._hang_cb: Optional[Callable[[dict], None]] = None
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
@@ -98,6 +99,12 @@ class TracingDaemon:
 
     def add_sink(self, sink: Callable[[list[TraceEvent]], None]):
         self._sinks.append(sink)
+
+    def add_batch_sink(self, sink):
+        """Columnar sink: receives each drain as one ``EventBatch`` (e.g.
+        ``engine.ingest_batch``), skipping per-event dict handling in the
+        consumer."""
+        self._batch_sinks.append(sink)
 
     def on_hang(self, cb: Callable[[dict], None]):
         self._hang_cb = cb
@@ -203,6 +210,14 @@ class TracingDaemon:
                 sink(events)
             except Exception:
                 pass
+        if self._batch_sinks:
+            from repro.core.columnar import EventBatch
+            batch = EventBatch.from_events(events)
+            for sink in self._batch_sinks:
+                try:
+                    sink(batch)
+                except Exception:
+                    pass
         if self.cfg.log_path:
             self.bytes_logged += dump_jsonl(events, self.cfg.log_path)
 

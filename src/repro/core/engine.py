@@ -10,6 +10,13 @@ Pipeline (paper Fig 2):
      vs the healthy historical profile -> ALGORITHM or INFRASTRUCTURE team.
   ③ anything unresolved escalates to cross-team review.
 
+Storage: events live in a step-partitioned columnar ``EventBatch`` — the
+engine never keeps per-rank Python lists.  Producers may feed it TraceEvent
+lists (the daemon sink), the legacy rank -> events dict, or EventBatches
+directly (``ingest_batch``, zero-copy append); ``evaluate_all`` computes
+every step's five metrics in ONE vectorized sweep (``aggregate_all``)
+instead of rescanning events per step.
+
 Conservative policy (paper §8.2): the engine *reports*; it never kills jobs.
 """
 from __future__ import annotations
@@ -22,10 +29,13 @@ import numpy as np
 
 from repro.core import failslow as fs
 from repro.core import regression as rg
+from repro.core.columnar import KIND_TO_CODE, EventBatch
 from repro.core.events import EventKind, TraceEvent
 from repro.core.hang import HangDiagnosis, diagnose_hang
 from repro.core.history import HealthyProfile, HistoryStore
-from repro.core.metrics import StepMetrics, aggregate_step, steps_in
+from repro.core.metrics import StepMetrics, aggregate_all
+
+_C_HANG = KIND_TO_CODE[EventKind.HANG_SUSPECT]
 
 
 class Team(str, enum.Enum):
@@ -77,7 +87,9 @@ class DiagnosticEngine:
                  history: Optional[HistoryStore] = None):
         self.cfg = config
         self.history = history or HistoryStore()
-        self.events_by_rank: dict[int, list[TraceEvent]] = {}
+        self._chunks: list[EventBatch] = []
+        self._merged: Optional[EventBatch] = None
+        self._metrics_cache: Optional[dict[int, StepMetrics]] = None
         self.metrics: dict[int, StepMetrics] = {}
         self.anomalies: list[Anomaly] = []
         self.baseline_metrics: Optional[StepMetrics] = None
@@ -86,15 +98,47 @@ class DiagnosticEngine:
         self._pending_regressions: dict[str, int] = {}
 
     # ------------------------------------------------------------------ #
-    # ingest
+    # ingest — all producers land in the columnar store
     # ------------------------------------------------------------------ #
     def ingest(self, events: list[TraceEvent]):
-        for ev in events:
-            self.events_by_rank.setdefault(ev.rank, []).append(ev)
+        """Daemon-sink entry point: a flat TraceEvent list."""
+        if events:
+            self._add(EventBatch.from_events(events))
 
-    def ingest_all(self, events_by_rank: dict[int, list[TraceEvent]]):
-        for r, evs in events_by_rank.items():
-            self.events_by_rank.setdefault(r, []).extend(evs)
+    def ingest_all(self, events_by_rank):
+        """Legacy rank -> event-list dict, or an EventBatch."""
+        if isinstance(events_by_rank, EventBatch):
+            self._add(events_by_rank)
+        elif events_by_rank:
+            self._add(EventBatch.from_events_by_rank(events_by_rank))
+
+    def ingest_batch(self, batch: EventBatch):
+        """Zero-conversion columnar append (the scale path)."""
+        self._add(batch)
+
+    def _add(self, batch: EventBatch):
+        if len(batch):
+            self._chunks.append(batch)
+            self._merged = None
+            self._metrics_cache = None
+
+    @property
+    def batch(self) -> EventBatch:
+        """The consolidated columnar store (chunks merged lazily)."""
+        if self._merged is None:
+            self._merged = EventBatch.concat(self._chunks)
+            self._chunks = [self._merged] if len(self._merged) else []
+        return self._merged
+
+    @property
+    def events_by_rank(self) -> dict[int, list[TraceEvent]]:
+        """Materialized per-event view — conversion cost, debugging only."""
+        return self.batch.to_events_by_rank()
+
+    def _all_metrics(self) -> dict[int, StepMetrics]:
+        if self._metrics_cache is None:
+            self._metrics_cache = aggregate_all(self.batch)
+        return self._metrics_cache
 
     @property
     def profile(self) -> Optional[HealthyProfile]:
@@ -104,9 +148,12 @@ class DiagnosticEngine:
     # per-step evaluation
     # ------------------------------------------------------------------ #
     def evaluate_step(self, step: int) -> list[Anomaly]:
-        m = aggregate_step(self.events_by_rank, step)
+        m = self._all_metrics().get(step)
         if m is None:
             return []
+        return self._evaluate_metrics(m, step)
+
+    def _evaluate_metrics(self, m: StepMetrics, step: int) -> list[Anomaly]:
         self.metrics[step] = m
         if self.baseline_metrics is None:
             self.baseline_metrics = m
@@ -188,9 +235,11 @@ class DiagnosticEngine:
         return found
 
     def evaluate_all(self) -> list[Anomaly]:
+        """One vectorized metrics sweep, then the per-step detector pass."""
+        ms = self._all_metrics()
         out = []
-        for step in steps_in(self.events_by_rank):
-            out.extend(self.evaluate_step(step))
+        for step in sorted(ms):
+            out.extend(self._evaluate_metrics(ms[step], step))
         out.extend(self.check_hangs())
         return out
 
@@ -198,12 +247,14 @@ class DiagnosticEngine:
     # hang path (①)
     # ------------------------------------------------------------------ #
     def check_hangs(self, ring_progress=None) -> list[Anomaly]:
+        b = self.batch
+        if not len(b):
+            return []
         suspects = {}
-        for r, evs in self.events_by_rank.items():
-            for e in evs:
-                if e.kind == EventKind.HANG_SUSPECT:
-                    suspects[r] = e.meta.get("stack", [])
-        if len(suspects) < max(len(self.events_by_rank) // 2, 1):
+        for row in np.nonzero(b.kind == _C_HANG)[0].tolist():
+            stack = (b.extra.get(row) or {}).get("stack", [])
+            suspects[int(b.rank[row])] = stack
+        if len(suspects) < max(b.num_distinct_ranks() // 2, 1):
             return []
         return [self.diagnose_hang(suspects, ring_progress)]
 
@@ -225,8 +276,8 @@ class DiagnosticEngine:
     # ------------------------------------------------------------------ #
     def learn_healthy(self, steps: Optional[list[int]] = None,
                       margin: float = 1.5) -> HealthyProfile:
-        steps = steps or steps_in(self.events_by_rank)
-        ms = [aggregate_step(self.events_by_rank, s) for s in steps]
-        ms = [m for m in ms if m is not None]
+        ms_all = self._all_metrics()
+        steps = steps if steps is not None else sorted(ms_all)
+        ms = [ms_all[s] for s in steps if s in ms_all]
         return self.history.learn_from_metrics(
             self.cfg.backend, self.cfg.num_ranks, ms, margin=margin)

@@ -104,12 +104,19 @@ class EventRingBuffer:
         return self._size
 
 
-def dump_jsonl(events: Iterable[TraceEvent], path: str) -> int:
-    """Write events; returns bytes written (Fig 9 log-size accounting)."""
+def dump_jsonl(events, path: str) -> int:
+    """Write events; returns bytes written (Fig 9 log-size accounting).
+
+    Accepts any iterable of TraceEvent, or a columnar batch exposing
+    ``to_jsonl_lines()`` (duck-typed so this module stays dependency-free).
+    """
+    if hasattr(events, "to_jsonl_lines"):
+        lines = events.to_jsonl_lines()
+    else:
+        lines = (ev.to_json() for ev in events)
     n = 0
     with open(path, "a") as f:
-        for ev in events:
-            line = ev.to_json()
+        for line in lines:
             f.write(line + "\n")
             n += len(line) + 1
     return n

@@ -22,6 +22,7 @@ from typing import Optional
 import numpy as np
 
 from repro.configs import ModelConfig
+from repro.core.columnar import EventBatch, EventBatchBuilder
 from repro.core.events import EventKind, TraceEvent
 
 # ----------------------------------------------------------------------- #
@@ -123,8 +124,25 @@ class ClusterSimulator:
 
     # ------------------------------------------------------------------ #
     def run(self, num_steps: int) -> dict[int, list[TraceEvent]]:
+        """Legacy per-event view; delegates to the columnar fast path."""
+        return self.run_batch(num_steps).to_events_by_rank()
+
+    def _hit_ranks(self, inj: Injection) -> np.ndarray:
+        if not inj.ranks:
+            return np.arange(self.n)
+        # dedupe: the legacy emitter membership-tested each rank once
+        return np.asarray(sorted({r for r in inj.ranks if 0 <= r < self.n}),
+                          np.int64)
+
+    def run_batch(self, num_steps: int) -> EventBatch:
+        """Emit the trace as an ``EventBatch``: whole rank-vectors per op,
+        no per-rank Python loops.  The RNG draw sequence is identical to
+        the historical per-event emitter (vector draws consume the same
+        PCG64 stream as the scalar draws they replace), so timestamps —
+        and therefore every diagnosis — are bit-for-bit unchanged."""
         n = self.n
-        events: dict[int, list[TraceEvent]] = {r: [] for r in range(n)}
+        all_ranks = np.arange(n)
+        b = EventBatchBuilder()
         cpu = np.zeros(n)
         gpu = np.zeros(n)
         ring = np.zeros((n, max(self.queue_depth, 1)))  # issue-queue ends
@@ -135,9 +153,8 @@ class ClusterSimulator:
             for oi, op in enumerate(self.program):
                 inj_hang = self._hang_at(step, oi, op)
                 if inj_hang is not None:
-                    self._finalize_hang(events, step, oi, op, inj_hang,
-                                        cpu, gpu)
-                    return events
+                    self._finalize_hang(b, step, oi, op, inj_hang, cpu, gpu)
+                    return b.build()
                 # ---- host-side pre-op stalls (GC / unnecessary sync) ---- #
                 for inj in self.injections:
                     if step < inj.start_step:
@@ -145,17 +162,14 @@ class ClusterSimulator:
                     if inj.kind in ("gc", "pyapi_stall") and \
                             (oi % max(inj.period_ops, 1)
                              == hash((step, inj.kind)) % max(inj.period_ops, 1)):
-                        for r in range(n):
-                            if not inj.hits_rank(r):
-                                continue
-                            t0 = cpu[r]
-                            cpu[r] += inj.duration * \
-                                (0.75 + 0.5 * self.rng.random())
-                            kind = (EventKind.GC if inj.kind == "gc"
-                                    else EventKind.PY_API)
-                            events[r].append(TraceEvent(
-                                kind, inj.api_name, r, t0, t0, cpu[r],
-                                step=step))
+                        hit = self._hit_ranks(inj)
+                        t0 = cpu[hit].copy()
+                        cpu[hit] += inj.duration * \
+                            (0.75 + 0.5 * self.rng.random(hit.size))
+                        b.append_block(
+                            EventKind.GC if inj.kind == "gc"
+                            else EventKind.PY_API,
+                            inj.api_name, hit, t0, t0, cpu[hit], step)
                 # ---- issue-queue bound (CPU can't run ahead forever) --- #
                 cpu = np.maximum(cpu, ring[:, qi % ring.shape[1]])
                 # ---- per-op host overhead ------------------------------ #
@@ -165,14 +179,11 @@ class ClusterSimulator:
 
                 if op.kind == "cpu":
                     dur = self._cpu_duration(op, step)
-                    for r in range(n):
-                        events[r].append(TraceEvent(
-                            EventKind.DATALOADER
-                            if "dataloader" in op.name else EventKind.PY_API,
-                            op.name, r, issue[r], issue[r], issue[r] + dur[r],
-                            step=step,
-                            meta={"tokens": self.program_tokens()}
-                            if "dataloader" in op.name else {}))
+                    is_dl = "dataloader" in op.name
+                    b.append_block(
+                        EventKind.DATALOADER if is_dl else EventKind.PY_API,
+                        op.name, all_ranks, issue, issue, issue + dur, step,
+                        tokens=self.program_tokens() if is_dl else None)
                     cpu = issue + dur
                     continue
 
@@ -191,42 +202,39 @@ class ClusterSimulator:
                 gpu = gpu + self._minority_time(op, step)
                 ring[:, qi % ring.shape[1]] = end
                 qi += 1
-                kind = (EventKind.KERNEL_COMPUTE if op.kind == "compute"
-                        else EventKind.KERNEL_COMM)
-                for r in range(n):
-                    meta = {"flops": op.flops} if op.flops else {}
-                    if op.kind == "comm":
-                        meta = {"bytes": op.bytes, "group": op.group}
-                    if op.meta:
-                        meta.update(op.meta)
-                    events[r].append(TraceEvent(
-                        kind, op.name, r, issue[r], start[r], end[r],
-                        step=step, meta=meta))
+                if op.kind == "compute":
+                    b.append_block(
+                        EventKind.KERNEL_COMPUTE, op.name, all_ranks,
+                        issue, start, end, step,
+                        flops=op.flops if op.flops else None,
+                        extra=op.meta or None)
+                else:
+                    b.append_block(
+                        EventKind.KERNEL_COMM, op.name, all_ranks,
+                        issue, start, end, step,
+                        nbytes=op.bytes, group=op.group,
+                        extra=op.meta or None)
                 # ---- sync-after-comm injection (Case-1) ---------------- #
                 if op.kind == "comm":
                     for inj in self.injections:
                         if (inj.kind == "sync_after_comm"
                                 and step >= inj.start_step):
-                            for r in range(n):
-                                if inj.hits_rank(r):
-                                    t0 = cpu[r]
-                                    cpu[r] = max(cpu[r], end[r])
-                                    events[r].append(TraceEvent(
-                                        EventKind.SYNC,
-                                        "jax@block_until_ready", r,
-                                        t0, t0, cpu[r], step=step))
+                            hit = self._hit_ranks(inj)
+                            t0 = cpu[hit].copy()
+                            cpu[hit] = np.maximum(cpu[hit], end[hit])
+                            b.append_block(
+                                EventKind.SYNC, "jax@block_until_ready",
+                                hit, t0, t0, cpu[hit], step)
             # ---- step event per rank ------------------------------------ #
             step_end = np.maximum(cpu, gpu)
-            for r in range(n):
-                events[r].append(TraceEvent(
-                    EventKind.STEP, f"step_{step}", r, step_t0[r],
-                    step_t0[r], step_end[r], step=step,
-                    meta={"tokens": self.program_tokens()}))
+            b.append_block(EventKind.STEP, f"step_{step}", all_ranks,
+                           step_t0, step_t0, step_end, step,
+                           tokens=self.program_tokens())
             # step-boundary sync: the loop reads back loss/metrics, so the
             # CPU drains to the device each step (bounds run-ahead; makes
             # healthy issue latencies spread ~uniformly over the step)
             cpu = np.maximum(cpu, gpu)
-        return events
+        return b.build()
 
     # ------------------------------------------------------------------ #
     def program_tokens(self) -> int:
@@ -247,7 +255,8 @@ class ClusterSimulator:
                 continue
             if inj.kind in ("straggler", "underclock") and op.kind == "compute":
                 for r in inj.ranks:
-                    dur[r] *= inj.factor
+                    if 0 <= r < self.n:
+                        dur[r] *= inj.factor
             elif inj.kind == "slow_compute" and op.kind == "compute" \
                     and inj.op_match in op.name:
                 dur *= inj.factor
@@ -274,7 +283,8 @@ class ClusterSimulator:
                 return inj
         return None
 
-    def _finalize_hang(self, events, step, oi, op, inj, cpu, gpu):
+    def _finalize_hang(self, b: EventBatchBuilder, step, oi, op, inj,
+                       cpu, gpu):
         """Produce the hang snapshot: per-rank stacks + ring progress."""
         r_fault = inj.ranks[0] if inj.ranks else 0
         comm = op.kind == "comm" and not inj.meta.get("noncomm_crash", False)
@@ -311,7 +321,8 @@ class ClusterSimulator:
             group_ranks=list(range(self.n)), truth_rank=r_fault)
         # heartbeat-style HANG_SUSPECT events from every healthy daemon
         now = float(max(cpu.max(), gpu.max()) + 30.0)
-        for r in range(self.n):
-            events[r].append(TraceEvent(
-                EventKind.HANG_SUSPECT, "hang_suspect", r, now, now, now,
-                step=step, meta={"stack": stacks[r], "silent_s": 30.0}))
+        b.append_block(
+            EventKind.HANG_SUSPECT, "hang_suspect", np.arange(self.n),
+            now, now, now, step,
+            extra=[{"stack": stacks[r], "silent_s": 30.0}
+                   for r in range(self.n)])

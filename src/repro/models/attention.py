@@ -15,6 +15,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.parallel.compat import shard_map
+
 from repro.models.layers import Constrain, apply_rope, normal_init, null_constrain
 
 NEG_INF = -1e30
@@ -352,7 +354,7 @@ def context_parallel_attention(q, k, v, mesh, *, causal=True, q_offset=0,
                                  q_chunk=min(q_chunk, s_loc),
                                  kv_chunk=kv_chunk)
 
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(P(bspec, model_axis), P(bspec), P(bspec)),
         out_specs=P(bspec, model_axis),

@@ -1,0 +1,20 @@
+"""JAX version compatibility shims.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` (<= 0.4.x, with
+``check_rep``) to ``jax.shard_map`` (with ``check_vma``).  Call sites use
+this wrapper with the modern keyword; we translate for old installs.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)

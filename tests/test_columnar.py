@@ -1,0 +1,277 @@
+"""Columnar event pipeline: lossless conversion + metrics equivalence.
+
+The EventBatch path must be an *observationally identical* replacement for
+the list-of-dataclass path: same events after round-trip, same JSONL
+lines, and the vectorized ``aggregate_all`` must reproduce the legacy
+per-step ``aggregate_step`` metrics on real simulator traces (healthy and
+injected), so every detector sees the same numbers.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.columnar import EventBatch, next_ge, prev_le
+from repro.core.engine import DiagnosticEngine, EngineConfig
+from repro.core.events import EventKind, TraceEvent, dump_jsonl, load_jsonl
+from repro.core.history import HistoryStore
+from repro.core.metrics import (_aggregate_step_events, aggregate_all,
+                                aggregate_step, steps_in)
+from repro.core.timeline import (ClusterSimulator, Injection,
+                                 program_from_config)
+
+N = 64
+
+
+def _sim(injections=None, seed=9, steps=3):
+    cfg = get_config("llama-20b-paper")
+    prog = program_from_config(cfg, num_chips=N)
+    return ClusterSimulator(N, prog, seed=seed,
+                            injections=injections or []).run_batch(steps)
+
+
+def _assert_events_equal(a: TraceEvent, b: TraceEvent):
+    assert a.kind == b.kind and a.name == b.name and a.rank == b.rank
+    assert a.issue_ts == b.issue_ts and a.start_ts == b.start_ts
+    assert a.end_ts == b.end_ts and a.step == b.step
+    assert a.meta == b.meta
+
+
+# --------------------------------------------------------------------- #
+# round-trips
+# --------------------------------------------------------------------- #
+def test_roundtrip_batch_events_batch():
+    batch = _sim([Injection(kind="gc", duration=0.25, period_ops=5)])
+    events = batch.to_events()
+    again = EventBatch.from_events(events)
+    assert len(again) == len(batch) == len(events)
+    for a, b in zip(events, again.to_events()):
+        _assert_events_equal(a, b)
+
+
+def test_roundtrip_events_by_rank():
+    batch = _sim()
+    by_rank = batch.to_events_by_rank()
+    assert sorted(by_rank) == list(range(N))
+    again = EventBatch.from_events_by_rank(by_rank)
+    by_rank2 = again.to_events_by_rank()
+    for r in by_rank:
+        assert len(by_rank[r]) == len(by_rank2[r])
+        for a, b in zip(by_rank[r], by_rank2[r]):
+            _assert_events_equal(a, b)
+
+
+def test_roundtrip_jsonl(tmp_path):
+    batch = _sim([Injection(kind="hang", ranks=(11,), at_step=2)])
+    path = str(tmp_path / "trace.jsonl")
+    nbytes = batch.write_jsonl(path)
+    assert nbytes > 0
+    # the legacy per-event loader and the batch loader read the same file
+    legacy = load_jsonl(path)
+    again = EventBatch.from_jsonl(path).to_events()
+    assert len(legacy) == len(again) == len(batch)
+    for a, b in zip(legacy, again):
+        _assert_events_equal(a, b)
+    # timestamps only rounded to 1e-6 by the shared codec (same as the
+    # TraceEvent.to_json contract), everything else exact
+    for ev, orig in zip(again, batch.to_events()):
+        assert ev.kind == orig.kind and ev.name == orig.name
+        assert ev.issue_ts == pytest.approx(orig.issue_ts, abs=1e-6)
+        # hang stacks survive (truncated to 4 frames by the codec)
+        if orig.kind == EventKind.HANG_SUSPECT:
+            assert ev.meta["stack"] == list(orig.meta["stack"])[-4:]
+
+
+def test_batch_lines_match_event_codec(tmp_path):
+    """dump_jsonl(batch) byte-identical to dump_jsonl(events)."""
+    batch = _sim(steps=1)
+    p1, p2 = str(tmp_path / "a.jsonl"), str(tmp_path / "b.jsonl")
+    n1 = dump_jsonl(batch, p1)
+    n2 = dump_jsonl(batch.to_events(), p2)
+    assert n1 == n2
+    assert open(p1).read() == open(p2).read()
+
+
+def test_concat_reindexes_names_and_extra():
+    b1 = _sim(steps=1, seed=1)
+    b2 = _sim([Injection(kind="hang", ranks=(3,), at_step=0, at_op=0,
+                         meta={"noncomm_crash": True})], seed=2)
+    cat = EventBatch.concat([b1, b2])
+    assert len(cat) == len(b1) + len(b2)
+    evs = cat.to_events()
+    for a, b in zip(b1.to_events() + b2.to_events(), evs):
+        _assert_events_equal(a, b)
+
+
+# --------------------------------------------------------------------- #
+# segmented query helpers
+# --------------------------------------------------------------------- #
+def test_prev_le_next_ge_match_bruteforce():
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        nv, nq = rng.integers(0, 30, 2)
+        vt = rng.random(nv) * 10
+        vs = rng.integers(0, 4, nv)
+        qt = rng.random(nq) * 10
+        qs = rng.integers(0, 4, nq)
+        got_prev = prev_le(vt, vs, qt, qs)
+        got_next = next_ge(vt, vs, qt, qs)
+        for i in range(nq):
+            cand = [vt[j] for j in range(nv)
+                    if vs[j] == qs[i] and vt[j] <= qt[i]]
+            want = max(cand) if cand else None
+            if want is None:
+                assert got_prev[i] == -1
+            else:
+                assert vt[got_prev[i]] == want and vs[got_prev[i]] == qs[i]
+            cand = [vt[j] for j in range(nv)
+                    if vs[j] == qs[i] and vt[j] >= qt[i]]
+            want = min(cand) if cand else None
+            if want is None:
+                assert got_next[i] == -1
+            else:
+                assert vt[got_next[i]] == want and vs[got_next[i]] == qs[i]
+
+
+# --------------------------------------------------------------------- #
+# metrics equivalence: vectorized sweep vs legacy per-step oracle
+# --------------------------------------------------------------------- #
+def _assert_metrics_equal(L, C):
+    assert L.step == C.step and L.num_ranks == C.num_ranks
+    assert np.isclose(L.t_step, C.t_step)
+    assert np.isclose(L.throughput, C.throughput)
+    assert set(L.flops) == set(C.flops)
+    for nm in L.flops:
+        assert set(L.flops[nm]) == set(C.flops[nm])
+        for r in L.flops[nm]:
+            assert np.isclose(L.flops[nm][r], C.flops[nm][r])
+    assert L.flops_overlapped == C.flops_overlapped
+    assert set(L.bandwidth) == set(C.bandwidth)
+    for nm in L.bandwidth:
+        assert np.isclose(L.bandwidth[nm], C.bandwidth[nm])
+    # same multiset of issue latencies (storage order is not part of the
+    # contract; every consumer is order-free)
+    assert L.issue_latencies.size == C.issue_latencies.size
+    assert np.allclose(np.sort(L.issue_latencies),
+                       np.sort(C.issue_latencies))
+    assert np.isclose(L.v_inter, C.v_inter)
+    assert np.isclose(L.v_minority, C.v_minority)
+    assert np.isclose(L.t_inter, C.t_inter)
+    assert set(L.api_spans) == set(C.api_spans)
+    for nm in L.api_spans:
+        assert np.isclose(L.api_spans[nm], C.api_spans[nm])
+
+
+@pytest.mark.parametrize("injections", [
+    [],
+    [Injection(kind="gc", duration=0.25, period_ops=5)],
+    [Injection(kind="minority_kernels", factor=0.4)],
+    [Injection(kind="slow_dataloader", duration=8.0)],
+    [Injection(kind="sync_after_comm")],
+], ids=["healthy", "gc", "minority", "dataloader", "sync"])
+def test_aggregate_all_matches_legacy(injections):
+    batch = _sim(injections)
+    by_rank = batch.to_events_by_rank()
+    all_m = aggregate_all(batch)
+    assert sorted(all_m) == steps_in(by_rank) == steps_in(batch)
+    for s in steps_in(by_rank):
+        _assert_metrics_equal(_aggregate_step_events(by_rank, s), all_m[s])
+
+
+def test_aggregate_step_polymorphic():
+    batch = _sim(steps=2)
+    m_batch = aggregate_step(batch, 1)
+    m_dict = aggregate_step(batch.to_events_by_rank(), 1)
+    _assert_metrics_equal(m_dict, m_batch)
+    assert aggregate_step(batch, 99) is None
+
+
+def test_handbuilt_voids_columnar():
+    """The v_inter/v_minority edge semantics survive the columnar path."""
+    def _ev(kind, name, rank, i, s, e, **meta):
+        return TraceEvent(kind, name, rank, i, s, e, step=0, meta=meta)
+    evs = {0: [
+        _ev(EventKind.STEP, "step_0", 0, 0, 0, 6.0, tokens=600),
+        _ev(EventKind.DATALOADER, "dl", 0, 0.0, 0.0, 1.0, tokens=600),
+        _ev(EventKind.KERNEL_COMPUTE, "a", 0, 0.9, 1.0, 2.0, flops=100.0),
+        _ev(EventKind.KERNEL_COMPUTE, "b", 0, 1.0, 2.0, 3.0, flops=100.0),
+        _ev(EventKind.KERNEL_COMPUTE, "c", 0, 2.5, 4.0, 5.0, flops=100.0),
+    ]}
+    m = aggregate_all(EventBatch.from_events_by_rank(evs))[0]
+    assert m.throughput == 100.0
+    assert m.t_inter == 1.0
+    assert abs(m.v_inter - 1.0 / 6.0) < 1e-9
+    assert abs(m.v_minority - 1.0 / 5.0) < 1e-9
+    assert m.flops["a"][0] == 100.0
+
+
+# --------------------------------------------------------------------- #
+# engine equivalence through the columnar store
+# --------------------------------------------------------------------- #
+def _world(n=32):
+    cfg = get_config("llama-20b-paper")
+    prog = program_from_config(cfg, num_chips=n)
+    store = HistoryStore()
+    eng0 = DiagnosticEngine(EngineConfig(backend="dense-train",
+                                         num_ranks=n), store)
+    for seed in range(3):
+        eng0.ingest_batch(ClusterSimulator(n, prog, seed=seed).run_batch(4))
+    eng0.learn_healthy()
+    return prog, store
+
+
+def test_engine_batch_vs_dict_ingest_same_diagnosis():
+    n = 32
+    prog, store = _world(n)
+    inj = [Injection(kind="gc", duration=0.02, period_ops=5)]
+    results = []
+    for mode in ("batch", "dict", "list"):
+        eng = DiagnosticEngine(EngineConfig(backend="dense-train",
+                                            num_ranks=n), store)
+        batch = ClusterSimulator(n, prog, seed=7,
+                                 injections=inj).run_batch(6)
+        if mode == "batch":
+            eng.ingest_batch(batch)
+        elif mode == "dict":
+            eng.ingest_all(batch.to_events_by_rank())
+        else:
+            eng.ingest(batch.to_events())
+        results.append([(a.kind, a.metric, a.team.value, a.step)
+                        for a in eng.evaluate_all()])
+    assert results[0] == results[1] == results[2]
+    assert any(m == "issue_latency" for _, m, _, _ in results[0])
+
+
+def test_engine_hang_path_through_batch():
+    n = 32
+    prog, store = _world(n)
+    eng = DiagnosticEngine(EngineConfig(backend="dense-train",
+                                        num_ranks=n), store)
+    sim = ClusterSimulator(n, prog, seed=7,
+                           injections=[Injection(kind="hang", ranks=(11,),
+                                                 at_step=2)])
+    eng.ingest_batch(sim.run_batch(6))
+    assert sim.hang is not None
+    found = eng.check_hangs(sim.hang.ring_progress)
+    assert found and found[0].kind == "hang" and 11 in found[0].ranks
+
+
+def test_engine_incremental_chunks_match_bulk():
+    n = 32
+    prog, store = _world(n)
+    inj = [Injection(kind="minority_kernels", factor=0.4)]
+    bulk = DiagnosticEngine(EngineConfig(backend="dense-train",
+                                         num_ranks=n), store)
+    bulk.ingest_batch(ClusterSimulator(n, prog, seed=3,
+                                       injections=inj).run_batch(6))
+    inc = DiagnosticEngine(EngineConfig(backend="dense-train",
+                                        num_ranks=n), store)
+    # same trace delivered as per-step chunks (streaming shape)
+    full = ClusterSimulator(n, prog, seed=3, injections=inj).run_batch(6)
+    by_rank = full.to_events_by_rank()
+    for s in steps_in(by_rank):
+        chunk = {r: [e for e in evs if e.step == s]
+                 for r, evs in by_rank.items()}
+        inc.ingest_all(chunk)
+    key = lambda a: (a.kind, a.metric, a.team.value, a.step)  # noqa: E731
+    assert sorted(map(key, bulk.evaluate_all())) == \
+        sorted(map(key, inc.evaluate_all()))

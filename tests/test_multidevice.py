@@ -13,6 +13,7 @@ SCRIPT = textwrap.dedent("""
     from repro.launch.mesh import make_test_mesh
     from repro.parallel.collectives import (ring_all_reduce,
                                             compressed_psum_local)
+    from repro.parallel.compat import shard_map
     from repro.parallel.pipeline import pipeline_apply
 
     mesh = make_test_mesh(data=2, model=4)
@@ -32,7 +33,7 @@ SCRIPT = textwrap.dedent("""
         out, err = compressed_psum_local(v, "model", None)
         return out, err
     xs = jnp.linspace(-2, 2, 64).reshape(8, 8)
-    out, err = jax.jit(jax.shard_map(
+    out, err = jax.jit(shard_map(
         body, mesh=mesh, in_specs=P(), out_specs=(P(), P("model")),
         check_vma=False))(xs)
     np.testing.assert_allclose(np.asarray(out), 4 * np.asarray(xs),
@@ -41,8 +42,8 @@ SCRIPT = textwrap.dedent("""
 
     # ---- GPipe pipeline == sequential application --------------------- #
     smesh = make_test_mesh(data=1, model=1)  # placeholder
-    pmesh = jax.make_mesh((4,), ("stage",),
-                          axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import _mk
+    pmesh = _mk((4,), ("stage",))
     def stage_fn(w, x):
         return jnp.tanh(x @ w)
     ws = jax.random.normal(jax.random.PRNGKey(0), (4, 16, 16)) * 0.5

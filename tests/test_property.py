@@ -1,5 +1,10 @@
 """Hypothesis property tests on system invariants."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev extra (requirements-dev.txt)")
+pytest.importorskip("scipy", reason="dev extra (requirements-dev.txt)")
+
 from hypothesis import given, settings, strategies as st
 from scipy.stats import wasserstein_distance
 
