@@ -1,6 +1,8 @@
 """Shared benchmark helpers: timing + the run.py CSV contract."""
 from __future__ import annotations
 
+import json
+import os
 import time
 from contextlib import contextmanager
 
@@ -27,3 +29,24 @@ def timed():
     t0 = time.perf_counter()
     yield box
     box["s"] = time.perf_counter() - t0
+
+
+def merge_bench_json(path: str, results: dict, meta: dict | None = None,
+                     section: str = "scales") -> dict:
+    """Merge per-scale results into an accumulating BENCH_*.json file so
+    the trajectory survives across PRs and partial (e.g. --quick) runs:
+    only the scale keys measured THIS run are replaced, everything else is
+    kept.  A missing or corrupt file starts fresh."""
+    data: dict = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (ValueError, OSError):
+            data = {}
+    if meta:
+        data.update(meta)
+    data.setdefault(section, {}).update(results)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2)
+    return data

@@ -13,10 +13,9 @@ Seed baselines (pre-columnar, 1024 ranks x 10 steps, one host):
 """
 from __future__ import annotations
 
-import json
 import time
 
-from benchmarks._util import emit
+from benchmarks._util import emit, merge_bench_json
 from repro.configs import get_config
 from repro.core.engine import DiagnosticEngine, EngineConfig
 from repro.core.history import HistoryStore
@@ -57,10 +56,10 @@ def _bench_scale(n: int, steps: int = STEPS):
 
 
 def main():
-    results = {"steps": STEPS, "scales": {}}
+    scales = {}
     for n in RANKS:
         nev, emit_evs, diag_evs = _bench_scale(n)
-        results["scales"][str(n)] = {
+        scales[str(n)] = {
             "events": nev,
             "sim_emit_events_per_s": emit_evs,
             "engine_diagnose_events_per_s": diag_evs,
@@ -69,9 +68,10 @@ def main():
              f"{emit_evs / 1e6:.2f}Mev_s;n_events={nev}")
         emit(f"ingest/engine_diagnose_{n}r", 1e6 / diag_evs,
              f"{diag_evs / 1e6:.2f}Mev_s;n_events={nev}")
-    with open(OUT_JSON, "w") as f:
-        json.dump(results, f, indent=2)
-    emit("ingest/json", 0.0, f"wrote={OUT_JSON}")
+    # merge (keyed by scale) so the bench trajectory accumulates across
+    # PRs / partial runs instead of clobbering unmeasured scales
+    results = merge_bench_json(OUT_JSON, scales, meta={"steps": STEPS})
+    emit("ingest/json", 0.0, f"merged={OUT_JSON}")
     return results
 
 

@@ -6,6 +6,8 @@ Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/_util.emit).
   Table 4 -> regression      Fig 12 -> case2_matmul
   Table 5 -> vminority       §Roofline -> roofline (reads dryrun_out/)
   §Scale  -> ingest (columnar pipeline throughput; BENCH_ingest.json)
+  §Fleet  -> fleet (multi-job incremental diagnosis + JSONL replay;
+             BENCH_fleet.json)
 """
 from __future__ import annotations
 
@@ -14,8 +16,9 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (case2_matmul, hang, ingest, issue_dist, logsize,
-                            overhead, regression, roofline, vminority)
+    from benchmarks import (case2_matmul, fleet, hang, ingest, issue_dist,
+                            logsize, overhead, regression, roofline,
+                            vminority)
     sections = [
         ("fig8_overhead", overhead.main),
         ("fig9_logsize", logsize.main),
@@ -26,6 +29,7 @@ def main() -> None:
         ("table5_vminority", vminority.main),
         ("roofline", roofline.main),
         ("scale_ingest", ingest.main),
+        ("scale_fleet", fleet.main),
     ]
     print("name,us_per_call,derived")
     failures = []

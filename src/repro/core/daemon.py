@@ -97,6 +97,22 @@ class TracingDaemon:
         if _GLOBAL_DAEMON is self:
             _GLOBAL_DAEMON = None
 
+    def stop(self):
+        """Idempotent shutdown: safe on a never-attached or already-stopped
+        daemon and safe to call repeatedly — the fleet close path stops
+        every job's daemons without tracking which already exited."""
+        self.detach()
+
+    def attach_fleet(self, mux, job_id: Optional[str] = None):
+        """Fleet seam: stream this daemon's drains into a
+        ``repro.fleet.FleetMultiplexer`` as job ``job_id`` (columnar batch
+        sink, no per-event dicts) and hand the daemon to the multiplexer so
+        ``mux.close()`` can ``stop()`` it with the rest of the fleet."""
+        jid = job_id if job_id is not None else f"job-rank{self.cfg.rank}"
+        mux.register_daemon(jid, self)
+        self.add_batch_sink(lambda batch, _jid=jid: mux.ingest(_jid, batch))
+        return self
+
     def add_sink(self, sink: Callable[[list[TraceEvent]], None]):
         self._sinks.append(sink)
 

@@ -15,7 +15,11 @@ engine never keeps per-rank Python lists.  Producers may feed it TraceEvent
 lists (the daemon sink), the legacy rank -> events dict, or EventBatches
 directly (``ingest_batch``, zero-copy append); ``evaluate_all`` computes
 every step's five metrics in ONE vectorized sweep (``aggregate_all``)
-instead of rescanning events per step.
+instead of rescanning events per step.  Fleet operation evaluates
+INCREMENTALLY instead: ``evaluate_step_batch`` (slice held by the fleet
+store) or ``evaluate_new_steps`` (own store, watermark-gated) advance the
+same stateful detectors step by step, so a job is diagnosed while it runs
+— see ``repro.fleet``.
 
 Conservative policy (paper §8.2): the engine *reports*; it never kills jobs.
 """
@@ -33,7 +37,7 @@ from repro.core.columnar import KIND_TO_CODE, EventBatch
 from repro.core.events import EventKind, TraceEvent
 from repro.core.hang import HangDiagnosis, diagnose_hang
 from repro.core.history import HealthyProfile, HistoryStore
-from repro.core.metrics import StepMetrics, aggregate_all
+from repro.core.metrics import StepMetrics, aggregate_all, aggregate_slice
 
 _C_HANG = KIND_TO_CODE[EventKind.HANG_SUSPECT]
 
@@ -96,6 +100,7 @@ class DiagnosticEngine:
         self._tp_monitor = fs.ThroughputMonitor(
             config.failslow_window, config.failslow_drop)
         self._pending_regressions: dict[str, int] = {}
+        self._evaluated: set[int] = set()   # steps seen by the incremental path
 
     # ------------------------------------------------------------------ #
     # ingest — all producers land in the columnar store
@@ -241,6 +246,57 @@ class DiagnosticEngine:
         for step in sorted(ms):
             out.extend(self._evaluate_metrics(ms[step], step))
         out.extend(self.check_hangs())
+        return out
+
+    # ------------------------------------------------------------------ #
+    # incremental evaluation (the fleet path)
+    # ------------------------------------------------------------------ #
+    def evaluate_step_batch(self, step_batch: EventBatch, step: int,
+                            num_ranks: Optional[int] = None) -> list[Anomaly]:
+        """Evaluate ONE completed step from its columnar slice, held by an
+        external step-partitioned store (the fleet multiplexer).
+        ``step_batch`` must contain only rows of ``step``, in insertion
+        order — exactly what ``StepPartitionedStore.pop_step`` yields.
+
+        Detector state (throughput monitor, baseline metrics, pending-
+        regression counters) advances exactly as in ``evaluate_all``, so
+        feeding every step's slice in ascending order — then the hang check
+        — yields identical anomalies to a terminal ``evaluate_all`` on the
+        concatenated batch.  ``num_ranks`` should be the job-wide rank
+        count (a single step's slice may not show every rank)."""
+        m = aggregate_slice(step_batch, step, num_ranks=num_ranks)
+        if m is None:
+            return []
+        self._evaluated.add(step)
+        return self._evaluate_metrics(m, step)
+
+    @property
+    def evaluated_steps(self) -> set:
+        """Steps the incremental path has diagnosed (single source of
+        truth for watermark/late-event bookkeeping in the fleet)."""
+        return self._evaluated
+
+    def evaluate_new_steps(self, upto: Optional[int] = None) -> list[Anomaly]:
+        """Incremental evaluation over the engine's OWN store: evaluate, in
+        ascending order, every step not yet evaluated — optionally only
+        steps below ``upto`` (the caller's watermark).  Detector work runs
+        on the pending steps only, but the store merge + step index are
+        still O(total events) per call, so for long-running streamed jobs
+        use the fleet path (``repro.fleet``), whose step-partitioned store
+        makes each evaluation proportional to the new data.  A terminal
+        ``finalize`` is simply ``evaluate_new_steps()`` followed by
+        ``check_hangs()``.  Do not mix with ``evaluate_all`` on the same
+        engine (it re-runs every step through the stateful detectors)."""
+        pending = [s for s in self.batch.steps()
+                   if s not in self._evaluated
+                   and (upto is None or s < upto)]
+        if not pending:
+            return []
+        ms = aggregate_all(self.batch, steps=pending)
+        out: list[Anomaly] = []
+        for step in sorted(ms):
+            self._evaluated.add(step)
+            out.extend(self._evaluate_metrics(ms[step], step))
         return out
 
     # ------------------------------------------------------------------ #

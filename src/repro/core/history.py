@@ -40,13 +40,48 @@ class HealthyProfile:
     def finalize(self, margin: float = 1.5):
         self.issue_w1_threshold = healthy_threshold(
             self.issue_latency_runs, margin)
+        self.__dict__.pop("_ref_cache", None)   # runs may have changed
+
+    def _ref(self):
+        """(concatenated, sorted, median, mean) of the healthy latency
+        samples, cached — the W1 detector compares EVERY step of EVERY
+        fleet job against this fixed reference; re-concatenating and
+        re-sorting it per step dominated the incremental hot path.  The
+        cache keys on (run count, sample count) and ``finalize`` clears
+        it, so re-learning invalidates; mutating a run IN PLACE without
+        re-finalizing would serve stale values."""
+        key = (len(self.issue_latency_runs),
+               sum(len(r) for r in self.issue_latency_runs))
+        cached = self.__dict__.get("_ref_cache")
+        if cached is not None and cached[0] == key:
+            return cached
+        if self.issue_latency_runs:
+            arr = np.concatenate(
+                [np.asarray(r, np.float64) for r in self.issue_latency_runs])
+        else:
+            arr = np.asarray([], np.float64)
+        srt = np.sort(arr)
+        med = float(np.median(srt)) if srt.size else 0.0
+        mean = float(np.mean(arr)) if arr.size else 0.0
+        cached = (key, arr, srt, med, mean)
+        self.__dict__["_ref_cache"] = cached
+        return cached
 
     @property
     def reference_latencies(self) -> np.ndarray:
-        if not self.issue_latency_runs:
-            return np.asarray([], np.float64)
-        return np.concatenate(
-            [np.asarray(r, np.float64) for r in self.issue_latency_runs])
+        return self._ref()[1]
+
+    @property
+    def reference_sorted(self) -> np.ndarray:
+        return self._ref()[2]
+
+    @property
+    def reference_median(self) -> float:
+        return self._ref()[3]
+
+    @property
+    def reference_mean(self) -> float:
+        return self._ref()[4]
 
 
 class HistoryStore:

@@ -219,12 +219,33 @@ def aggregate_all(batch: EventBatch,
     return out
 
 
+def aggregate_slice(batch: EventBatch, step: int,
+                    num_ranks: Optional[int] = None) -> Optional[StepMetrics]:
+    """StepMetrics for a batch KNOWN to hold exactly one step's rows in
+    insertion order (a fleet-store slice): skips the ``step_index``
+    argsort/unique that ``aggregate_all`` would redo per call.  Identical
+    result to ``aggregate_all(batch)[step]``."""
+    if len(batch) == 0:
+        return None
+    if num_ranks is None:
+        num_ranks = batch.num_distinct_ranks()
+    return _aggregate_rows(batch, np.arange(len(batch)), step, int(num_ranks))
+
+
 def _group_bounds(keys: np.ndarray):
     """(order, unique_keys, bounds) for a stable group-by over ``keys``."""
     o = np.argsort(keys, kind="stable")
     sorted_keys = keys[o]
     u, starts = np.unique(sorted_keys, return_index=True)
     return o, u, np.append(starts, keys.size)
+
+
+def _appearance_order(o: np.ndarray, bounds: np.ndarray) -> list[int]:
+    """Group iteration order by FIRST APPEARANCE in the original rows (the
+    stable sort puts each group's earliest row at its segment start).  Keys
+    are interning ids, which the fleet shares across jobs — dict key order
+    must not depend on which job interned a name first."""
+    return np.argsort(o[bounds[:-1]], kind="stable").tolist()
 
 
 def _aggregate_rows(b: EventBatch, rows: np.ndarray, step: int,
@@ -269,10 +290,11 @@ def _aggregate_rows(b: EventBatch, rows: np.ndarray, step: int,
         o, u, gb = _group_bounds(cn)
         cr_l = rk[m_flop][o].tolist()
         cf_l = cf[o].tolist()
-        for j, nm_id in enumerate(u.tolist()):
+        u_l = u.tolist()
+        for j in _appearance_order(o, gb):
             lo, hi = gb[j], gb[j + 1]
             # dict(zip(...)) keeps last-wins semantics for duplicate ranks
-            flops[names[nm_id]] = dict(zip(cr_l[lo:hi], cf_l[lo:hi]))
+            flops[names[u_l[j]]] = dict(zip(cr_l[lo:hi], cf_l[lo:hi]))
 
     # ---- comp/comm overlap flags (§5.2.2) ----------------------------- #
     overlapped: set[str] = set()
@@ -303,7 +325,9 @@ def _aggregate_rows(b: EventBatch, rows: np.ndarray, step: int,
         st_s, en_s = st[m_comm][o], en[m_comm][o]
         nb_s = nb[m_comm][o]
         rows_comm = rows[m_comm][o]
-        for j, nm_id in enumerate(u.tolist()):
+        u_l = u.tolist()
+        for j in _appearance_order(o, gb):
+            nm_id = u_l[j]
             lo, hi = gb[j], gb[j + 1]
             start = float(st_s[lo:hi].max())
             end = float(en_s[lo:hi].max())
@@ -384,9 +408,10 @@ def _aggregate_rows(b: EventBatch, rows: np.ndarray, step: int,
         an = nid[m_api]
         totals = np.bincount(an, weights=(en - st)[m_api],
                              minlength=len(names))
-        for nm_id in np.nonzero(np.bincount(an, minlength=len(names)))[0] \
-                .tolist():
-            api_spans[names[nm_id]] = float(totals[nm_id])
+        o, u, gb = _group_bounds(an)
+        u_l = u.tolist()
+        for j in _appearance_order(o, gb):
+            api_spans[names[u_l[j]]] = float(totals[u_l[j]])
 
     return StepMetrics(
         step=step, t_step=t_step, throughput=throughput,

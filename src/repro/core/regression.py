@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.core.history import HealthyProfile
 from repro.core.metrics import StepMetrics
-from repro.core.wasserstein import normalized_w1
+from repro.core.wasserstein import w1_distance_sorted
 
 ALIGN_BYTES = 128          # tensor-core/MXU tile alignment (paper Case-2)
 FLOPS_REGRESSION_FRAC = 0.75
@@ -45,17 +45,19 @@ class RegressionFinding:
 
 def check_issue_latency(m: StepMetrics,
                         prof: HealthyProfile) -> Optional[RegressionFinding]:
-    ref = prof.reference_latencies
-    if m.issue_latencies.size < 8 or ref.size < 8:
+    if m.issue_latencies.size < 8 or prof.reference_latencies.size < 8:
         return None
-    d = normalized_w1(m.issue_latencies, ref)
+    cur = np.sort(np.asarray(m.issue_latencies, np.float64))
+    d = w1_distance_sorted(cur, prof.reference_sorted) \
+        / max(prof.reference_mean, 1e-12)
     if d <= prof.issue_w1_threshold:
         return None
     # one-sided: kernel-issue stalls COMPRESS issue latencies (§5.2.2 /
     # Fig 11 — unhealthy CDFs rise much faster).  Larger-than-healthy
     # latencies mean a busier device (jitter, stragglers), which belongs
     # to the fail-slow path, not this detector.
-    if float(np.median(m.issue_latencies)) >= float(np.median(ref)):
+    median_cur = float(np.median(cur))
+    if median_cur >= prof.reference_median:
         return None
     # §5.2.4: find traced APIs invoked just before the stalled kernels
     culprit, team = _narrow_api(m)
@@ -64,8 +66,8 @@ def check_issue_latency(m: StepMetrics,
         root_cause=culprit or "kernel-issue stall (no traced API matched)",
         suggested_team=team,
         evidence={"w1": d, "threshold": prof.issue_w1_threshold,
-                  "median_latency": float(np.median(m.issue_latencies)),
-                  "healthy_median": float(np.median(ref)),
+                  "median_latency": median_cur,
+                  "healthy_median": prof.reference_median,
                   "api_spans": dict(m.api_spans)})
 
 

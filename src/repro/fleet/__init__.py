@@ -1,0 +1,31 @@
+"""FLARE fleet subsystem: streaming multi-job multiplexing, incremental
+per-step diagnosis, and chunked JSONL replay (the paper's eight-month,
+6,000-GPU continuous-operation layer).
+
+Quickstart::
+
+    from repro.fleet import FleetMultiplexer, FleetConfig
+    mux = FleetMultiplexer(FleetConfig(watermark_delay=1), history=store)
+    mux.add_job("job-a", EngineConfig(backend="dense-train", num_ranks=256))
+    mux.ingest("job-a", batch_or_events)      # per chunk, any producer
+    for fa in mux.poll():                     # merged, ts-ordered, routed
+        print(fa)
+    mux.finalize()                            # flush watermarks + hangs
+
+Live daemons plug in via ``daemon.attach_fleet(mux, "job-a")``; recorded
+logs via ``FleetReplayer(mux).replay_dir("logs/")``.
+"""
+from repro.fleet.multiplexer import (FleetConfig, FleetJob,  # noqa: F401
+                                     FleetMultiplexer)
+from repro.fleet.replay import FleetReplayer, ReplayStats  # noqa: F401
+from repro.fleet.store import (SharedInterner,  # noqa: F401
+                               StepPartitionedStore)
+from repro.fleet.stream import (DEFAULT_ROUTES, AnomalyStream,  # noqa: F401
+                                FleetAnomaly)
+
+__all__ = [
+    "FleetConfig", "FleetJob", "FleetMultiplexer",
+    "FleetReplayer", "ReplayStats",
+    "SharedInterner", "StepPartitionedStore",
+    "AnomalyStream", "FleetAnomaly", "DEFAULT_ROUTES",
+]

@@ -1,0 +1,228 @@
+"""FleetMultiplexer — streaming multi-job ingest + incremental diagnosis.
+
+The paper's headline deployment is not one job but a fleet: Flare ran for
+eight months over 6,000 GPUs, ingesting every concurrent job's daemon
+streams and diagnosing them *online*.  This module is that layer:
+
+  * many jobs ingest concurrently into per-job step-partitioned columnar
+    stores with fleet-shared name/group interning (``fleet.store``);
+  * each job is evaluated INCREMENTALLY: a per-job watermark closes step
+    ``s`` once data for step ``s + watermark_delay`` has been seen
+    (out-of-order chunks within the window are fine; rows arriving for an
+    already-diagnosed step are counted as late and dropped);
+  * closed steps run through the job's own ``DiagnosticEngine`` via
+    ``evaluate_step_batch`` — the same stateful detectors as a terminal
+    ``evaluate_all``, so streaming diagnosis equals batch diagnosis;
+  * hang suspects are tracked per job as chunks arrive; when a majority of
+    the job's ranks report, pending steps are flushed and the hang is
+    diagnosed immediately (a hung job stops producing events — waiting for
+    a watermark that will never advance would mask exactly the anomaly the
+    daemons are screaming about);
+  * everything lands in one merged, timestamp-ordered, team-routed
+    :class:`~repro.fleet.stream.AnomalyStream` tagged with job ids.
+
+Feed it from live ``TracingDaemon``s (``daemon.attach_fleet(mux, job)``),
+from simulators (``mux.ingest(job, batch)``), or from recorded JSONL logs
+(``fleet.replay``).  Ingest is thread-safe and parallel across jobs:
+each job has its own lock (a global lock guards only the job registry;
+the shared interner and the anomaly stream lock internally), so daemon
+background threads feeding different jobs never serialize each other's
+diagnosis.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.columnar import EventBatch
+from repro.core.engine import DiagnosticEngine, EngineConfig, Team
+from repro.core.history import HistoryStore
+from repro.fleet.store import SharedInterner, StepPartitionedStore
+from repro.fleet.stream import AnomalyStream, FleetAnomaly
+
+
+@dataclass
+class FleetConfig:
+    watermark_delay: int = 1    # steps behind max-seen before a step closes
+    backend: str = "dense-train"
+    routes: Optional[dict[Team, str]] = None
+
+
+@dataclass
+class FleetJob:
+    job_id: str
+    store: StepPartitionedStore
+    engine: DiagnosticEngine
+    late_events: int = 0
+    hang_reported: bool = False
+    daemon: object = None
+    anomaly_count: int = 0
+    # per-job lock: jobs share no mutable state except the interner and
+    # the anomaly stream (each locked internally), so concurrent daemon
+    # threads diagnose different jobs in parallel instead of serializing
+    # the whole fleet behind one lock
+    lock: threading.Lock = field(default_factory=threading.Lock)
+
+    @property
+    def evaluated(self) -> set:
+        """Diagnosed steps — the engine's record is the single source of
+        truth (it marks steps in ``evaluate_step_batch``)."""
+        return self.engine.evaluated_steps
+
+
+class FleetMultiplexer:
+    def __init__(self, config: Optional[FleetConfig] = None,
+                 history: Optional[HistoryStore] = None):
+        self.cfg = config or FleetConfig()
+        self.history = history or HistoryStore()
+        self.interner = SharedInterner()
+        self.stream = AnomalyStream(self.cfg.routes)
+        self._jobs: dict[str, FleetJob] = {}
+        self._lock = threading.RLock()    # job REGISTRY only; work is
+        #                                   guarded by each job's own lock
+
+    # ------------------------------------------------------------------ #
+    # job registry
+    # ------------------------------------------------------------------ #
+    def add_job(self, job_id: str,
+                engine_cfg: Optional[EngineConfig] = None) -> FleetJob:
+        """Register a job.  Without an ``engine_cfg`` (and thus without a
+        learned profile for its backend/scale) the job still gets the
+        macro fail-slow and hang paths; regressions need history."""
+        with self._lock:
+            if job_id in self._jobs:
+                return self._jobs[job_id]
+            cfg = engine_cfg or EngineConfig(backend=self.cfg.backend)
+            job = FleetJob(
+                job_id=job_id,
+                store=StepPartitionedStore(self.interner),
+                engine=DiagnosticEngine(cfg, self.history))
+            self._jobs[job_id] = job
+            return job
+
+    def job(self, job_id: str) -> FleetJob:
+        with self._lock:
+            return self._jobs[job_id]
+
+    @property
+    def jobs(self) -> list[FleetJob]:
+        with self._lock:
+            return list(self._jobs.values())
+
+    def register_daemon(self, job_id: str, daemon) -> FleetJob:
+        job = self.add_job(job_id)
+        job.daemon = daemon
+        return job
+
+    def attach_daemon(self, job_id: str, daemon):
+        """Convenience for ``daemon.attach_fleet(self, job_id)``."""
+        return daemon.attach_fleet(self, job_id)
+
+    # ------------------------------------------------------------------ #
+    # ingest + incremental evaluation
+    # ------------------------------------------------------------------ #
+    def ingest(self, job_id: str, events) -> None:
+        """Append one chunk of a job's stream: an ``EventBatch``, a flat
+        ``list[TraceEvent]`` (daemon sink shape), or the legacy
+        rank -> event-list dict.  Closes and diagnoses every step the
+        chunk's watermark completed."""
+        if isinstance(events, EventBatch):
+            batch = events
+        elif isinstance(events, dict):
+            batch = EventBatch.from_events_by_rank(events)
+        else:
+            batch = EventBatch.from_events(events)
+        if not len(batch):
+            return
+        with self._lock:
+            job = self._jobs.get(job_id) or self.add_job(job_id)
+        with job.lock:
+            touched = job.store.append(batch)
+            for s, nrows in touched.items():
+                if s in job.evaluated:
+                    job.late_events += nrows
+                    job.store.drop_step(s)
+            self._advance(job)
+            self._maybe_hang(job)
+
+    @staticmethod
+    def _job_ranks(job: FleetJob) -> int:
+        """Job-wide rank count: the configured engine scale wins over the
+        ranks seen so far — early chunks (one daemon's first drain) may
+        show a tiny subset, which would skew per-rank metrics and let a
+        single suspect clear the majority-hang threshold."""
+        return max(job.store.num_ranks, job.engine.cfg.num_ranks)
+
+    def _advance(self, job: FleetJob, flush: bool = False) -> None:
+        limit = None if flush \
+            else job.store.max_step_seen - self.cfg.watermark_delay
+        for s in job.store.pending_steps():
+            if limit is not None and s > limit:
+                break
+            sb = job.store.pop_step(s)
+            anoms = job.engine.evaluate_step_batch(
+                sb, s, num_ranks=self._job_ranks(job))
+            ts = float(sb.end_ts.max()) if len(sb) else job.store.last_ts
+            for a in anoms:
+                self.stream.push(job.job_id, a, ts)
+                job.anomaly_count += 1
+
+    def _maybe_hang(self, job: FleetJob) -> None:
+        stacks = job.store.hang_stacks
+        if job.hang_reported or not stacks:
+            return
+        if len(stacks) < max(self._job_ranks(job) // 2, 1):
+            return
+        # a hung job's stream stops: flush pending steps (matching the
+        # terminal evaluate_all order), then diagnose from the stacks.
+        self._advance(job, flush=True)
+        a = job.engine.diagnose_hang(dict(stacks), None)
+        self.stream.push(job.job_id, a, job.store.last_ts)
+        job.anomaly_count += 1
+        job.hang_reported = True
+
+    # ------------------------------------------------------------------ #
+    # draining / shutdown
+    # ------------------------------------------------------------------ #
+    def poll(self) -> list[FleetAnomaly]:
+        """New anomalies since the last poll, merged + ordered."""
+        return self.stream.drain()
+
+    def flush(self, job_id: Optional[str] = None) -> None:
+        """Evaluate pending steps (ignoring watermarks) and run the hang
+        check for one job or all jobs.  Anomalies stay in the stream for
+        the next ``poll()`` — use ``finalize`` to flush AND drain."""
+        targets = [self.job(job_id)] if job_id is not None else self.jobs
+        for job in targets:
+            with job.lock:
+                self._advance(job, flush=True)
+                self._maybe_hang(job)
+
+    def finalize(self, job_id: Optional[str] = None) -> list[FleetAnomaly]:
+        """``flush`` + drain: returns the merged remaining stream."""
+        self.flush(job_id)
+        return self.stream.drain()
+
+    def close(self) -> list[FleetAnomaly]:
+        """Stop every job's attached daemon (idempotent ``stop()``), then
+        finalize the whole fleet."""
+        for job in self.jobs:
+            if job.daemon is not None:
+                job.daemon.stop()
+        return self.finalize()
+
+    def stats(self) -> dict[str, dict]:
+        out = {}
+        for j in self.jobs:
+            with j.lock:
+                out[j.job_id] = {
+                    "events": j.store.events_total,
+                    "ranks": j.store.num_ranks,
+                    "steps_evaluated": len(j.evaluated),
+                    "max_step_seen": j.store.max_step_seen,
+                    "late_events": j.late_events,
+                    "anomalies": j.anomaly_count,
+                    "hang_reported": j.hang_reported,
+                }
+        return out

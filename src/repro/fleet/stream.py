@@ -1,0 +1,74 @@
+"""Merged fleet anomaly stream: job-tagged, timestamp-ordered, team-routed.
+
+Each job's engine emits plain :class:`~repro.core.engine.Anomaly` objects;
+the stream wraps them with the job id, the event time (end of the step
+slice that fired), a fleet-wide arrival sequence number, and the routing
+target for the anomaly's team (paper Table 1: operations / algorithm /
+infrastructure / cross-team).  ``drain()`` returns everything pushed since
+the last drain merged across jobs in ``(ts, seq)`` order — jobs advance at
+their own pace, so total order is per drain; a terminal ``finalize`` drain
+is fully ordered.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.core.engine import Anomaly, Team
+
+DEFAULT_ROUTES: dict[Team, str] = {
+    Team.OPERATIONS: "oncall-operations",
+    Team.ALGORITHM: "oncall-algorithm",
+    Team.INFRASTRUCTURE: "oncall-infrastructure",
+    Team.CROSS_TEAM: "cross-team-review",
+}
+
+
+@dataclass
+class FleetAnomaly:
+    job_id: str
+    ts: float                # event time: end of the slice that fired
+    seq: int                 # fleet-wide arrival order (total tie-break)
+    anomaly: Anomaly
+    route: str
+
+    @property
+    def team(self) -> Team:
+        return self.anomaly.team
+
+    def __str__(self):
+        return f"[{self.ts:10.3f}s] {self.job_id} -> {self.route}: " \
+               f"{self.anomaly}"
+
+
+class AnomalyStream:
+    """Collects per-job anomalies; drains them merged and ordered.
+    Push/drain are thread-safe (jobs advance on their own threads)."""
+
+    def __init__(self, routes: Optional[dict[Team, str]] = None):
+        self.routes = dict(DEFAULT_ROUTES)
+        if routes:
+            self.routes.update(routes)
+        self._pending: list[FleetAnomaly] = []
+        self._lock = threading.Lock()
+        self.total = 0
+
+    def push(self, job_id: str, anomaly: Anomaly, ts: float) -> FleetAnomaly:
+        with self._lock:
+            fa = FleetAnomaly(
+                job_id=job_id, ts=float(ts), seq=self.total, anomaly=anomaly,
+                route=self.routes.get(anomaly.team,
+                                      DEFAULT_ROUTES[Team.CROSS_TEAM]))
+            self._pending.append(fa)
+            self.total += 1
+            return fa
+
+    def drain(self) -> list[FleetAnomaly]:
+        with self._lock:
+            out, self._pending = self._pending, []
+        out.sort(key=lambda a: (a.ts, a.seq))
+        return out
+
+    def __len__(self) -> int:
+        return len(self._pending)

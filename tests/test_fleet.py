@@ -1,0 +1,303 @@
+"""Fleet subsystem tests (ISSUE 2).
+
+Covered:
+  * incremental-vs-batch equivalence: the multiplexer's per-step
+    evaluation must produce byte-identical anomalies to a terminal
+    ``evaluate_all`` on the concatenated batch, per job — including the
+    hang path and with other (overlapping-name) jobs in the same fleet;
+  * chunked-vs-line-by-line JSONL decoder equality on the same file;
+  * tolerant decode of truncated/corrupt trailing lines (+ skip count);
+  * shared-interning correctness across jobs with overlapping op names;
+  * watermark semantics and late-event accounting;
+  * directory replay through the multiplexer;
+  * daemon ``attach_fleet`` seam and idempotent ``stop()``.
+"""
+import json
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.columnar import EventBatch
+from repro.core.daemon import DaemonConfig, TracingDaemon
+from repro.core.engine import DiagnosticEngine, EngineConfig
+from repro.core.events import EventKind, TraceEvent
+from repro.core.history import HistoryStore
+from repro.core.timeline import (ClusterSimulator, Injection,
+                                 program_from_config)
+from repro.fleet import (FleetConfig, FleetMultiplexer, FleetReplayer,
+                         SharedInterner)
+
+N = 32
+
+
+@pytest.fixture(scope="module")
+def world():
+    cfg = get_config("llama-20b-paper")
+    prog = program_from_config(cfg, num_chips=N)
+    store = HistoryStore()
+    eng0 = DiagnosticEngine(
+        EngineConfig(backend="dense-train", num_ranks=N), store)
+    for seed in range(3):
+        eng0.ingest_batch(ClusterSimulator(N, prog, seed=seed).run_batch(4))
+    eng0.learn_healthy()
+    return prog, store
+
+
+def _sig(a):
+    """Byte-level anomaly signature: rendered line + canonical evidence."""
+    return (str(a), json.dumps(a.evidence, sort_keys=True, default=str))
+
+
+def _step_chunks(batch):
+    order, uniq, bounds = batch.step_index()
+    return [batch.take(order[bounds[i]:bounds[i + 1]])
+            for i in range(uniq.size)]
+
+
+SCENARIOS = {
+    "healthy": [],
+    "gc": [Injection(kind="gc", duration=0.02, period_ops=5)],
+    "underclock": [Injection(kind="underclock", ranks=(5,), factor=2.5,
+                             start_step=3)],
+    "jitter": [Injection(kind="network_jitter", factor=3.0, start_step=3)],
+    "hang": [Injection(kind="hang", ranks=(7,), at_step=2)],
+}
+
+
+def test_incremental_matches_batch_per_job(world):
+    """Every job's streamed anomalies == terminal evaluate_all, even with
+    the jobs multiplexed into ONE fleet with shared interning."""
+    prog, store = world
+    mux = FleetMultiplexer(FleetConfig(watermark_delay=1), history=store)
+    oracle, batches = {}, {}
+    for name, inj in SCENARIOS.items():
+        batch = ClusterSimulator(N, prog, seed=7,
+                                 injections=inj).run_batch(6)
+        batches[name] = batch
+        eng = DiagnosticEngine(
+            EngineConfig(backend="dense-train", num_ranks=N), store)
+        eng.ingest_batch(batch)
+        oracle[name] = [_sig(a) for a in eng.evaluate_all()]
+        mux.add_job(name, EngineConfig(backend="dense-train", num_ranks=N))
+    # interleave the jobs' per-step chunks round-robin (concurrent streams)
+    pending = {name: _step_chunks(b) for name, b in batches.items()}
+    while any(pending.values()):
+        for name, chunks in pending.items():
+            if chunks:
+                mux.ingest(name, chunks.pop(0))
+    got = {name: [] for name in SCENARIOS}
+    for fa in mux.poll() + mux.finalize():
+        got[fa.job_id].append(_sig(fa.anomaly))
+    for name in SCENARIOS:
+        assert got[name] == oracle[name], name
+    assert oracle["healthy"] == []          # no cross-job contamination
+    assert any(oracle[k] for k in ("gc", "underclock", "jitter", "hang"))
+
+
+def test_engine_evaluate_new_steps_matches_evaluate_all(world):
+    prog, store = world
+    batch = ClusterSimulator(N, prog, seed=7,
+                             injections=SCENARIOS["gc"]).run_batch(5)
+    bulk = DiagnosticEngine(
+        EngineConfig(backend="dense-train", num_ranks=N), store)
+    bulk.ingest_batch(batch)
+    expect = [_sig(a) for a in bulk.evaluate_all()]
+    inc = DiagnosticEngine(
+        EngineConfig(backend="dense-train", num_ranks=N), store)
+    got = []
+    for i, chunk in enumerate(_step_chunks(batch)):
+        inc.ingest_batch(chunk)
+        got.extend(inc.evaluate_new_steps(upto=i))  # watermark: step < max
+    got.extend(inc.evaluate_new_steps())            # flush
+    got.extend(inc.check_hangs())
+    assert [_sig(a) for a in got] == expect
+
+
+def test_chunked_jsonl_decoder_equals_line_by_line(world, tmp_path):
+    prog, _ = world
+    batch = ClusterSimulator(N, prog, seed=3).run_batch(3)
+    path = str(tmp_path / "job.jsonl")
+    batch.write_jsonl(path)
+    a = EventBatch.from_jsonl(path)
+    b = EventBatch.from_jsonl_chunked(path, chunk_bytes=4096, max_workers=3)
+    assert len(a) == len(b) == len(batch)
+    assert a.names == b.names and a.groups == b.groups
+    for col in ("kind", "name_id", "rank", "issue_ts", "start_ts", "end_ts",
+                "step", "nbytes", "tokens", "group_id"):
+        assert np.array_equal(getattr(a, col), getattr(b, col)), col
+    assert np.array_equal(a.flops, b.flops, equal_nan=True)
+    assert a.extra == b.extra
+
+
+def test_from_jsonl_skips_corrupt_trailing_lines(tmp_path):
+    path = str(tmp_path / "killed.jsonl")
+    evs = [TraceEvent(EventKind.STEP, f"step_{i}", 0, i, i, i + 1, step=i,
+                      meta={"tokens": 8}) for i in range(5)]
+    EventBatch.from_events(evs).write_jsonl(path)
+    with open(path, "a") as f:
+        f.write('not json at all\n')
+        f.write('{"k":"step","n":"torn')       # truncated mid-write
+    with pytest.warns(UserWarning, match="skipped 2"):
+        batch, skipped = EventBatch.from_jsonl(path, with_skip_count=True)
+    assert skipped == 2 and len(batch) == 5
+    with pytest.warns(UserWarning, match="skipped 2"):
+        batch2, skipped2 = EventBatch.from_jsonl_chunked(
+            path, chunk_bytes=64, with_skip_count=True)
+    assert skipped2 == 2 and len(batch2) == 5
+    assert batch2.to_events() == batch.to_events()
+
+
+def test_shared_interning_across_jobs():
+    """Jobs with overlapping op names share one id space losslessly."""
+    interner = SharedInterner()
+    ev_a = [TraceEvent(EventKind.KERNEL_COMPUTE, n, r, 0.0, 0.0, 1.0, step=0,
+                       meta={"flops": 1.0, "group": "dp"})
+            for n in ("matmul", "attn", "norm") for r in range(2)]
+    ev_b = [TraceEvent(EventKind.KERNEL_COMPUTE, n, r, 0.0, 0.0, 1.0, step=0,
+                       meta={"flops": 1.0, "group": "pp"})
+            for n in ("norm", "embed", "matmul") for r in range(2)]
+    a = interner.adopt(EventBatch.from_events(ev_a))
+    b = interner.adopt(EventBatch.from_events(ev_b))
+    assert a.names is interner.names and b.names is interner.names
+    assert interner.names == ["matmul", "attn", "norm", "embed"]
+    assert interner.groups == ["dp", "pp"]
+    # same string -> same id across jobs
+    assert a.name_id[0] == b.name_id[4] == interner.names.index("matmul")
+    # adoption is lossless row-wise
+    assert [e.name for e in a.to_events()] == [e.name for e in ev_a]
+    assert [e.name for e in b.to_events()] == [e.name for e in ev_b]
+    assert [e.meta.get("group") for e in b.to_events()] == ["pp"] * 6
+    # shared-interning concat needs no remap and keeps the shared tables
+    m = EventBatch.concat([a, b])
+    assert m.names is interner.names
+    assert [e.name for e in m.to_events()] == \
+        [e.name for e in ev_a] + [e.name for e in ev_b]
+
+
+def test_watermark_and_late_events(world):
+    prog, store = world
+    mux = FleetMultiplexer(FleetConfig(watermark_delay=1), history=store)
+    mux.add_job("j", EngineConfig(backend="dense-train", num_ranks=N))
+    batch = ClusterSimulator(N, prog, seed=5).run_batch(4)
+    chunks = _step_chunks(batch)
+    mux.ingest("j", chunks[0])
+    assert mux.job("j").evaluated == set()        # watermark holds step 0
+    mux.ingest("j", chunks[1])
+    assert mux.job("j").evaluated == {0}          # step 1 closed step 0
+    mux.ingest("j", chunks[0])                    # stale re-delivery
+    assert mux.job("j").late_events == len(chunks[0])
+    mux.ingest("j", chunks[2])
+    mux.ingest("j", chunks[3])
+    mux.finalize("j")
+    assert mux.job("j").evaluated == {0, 1, 2, 3}
+    st = mux.stats()["j"]
+    assert st["events"] == len(batch) + len(chunks[0])
+    assert st["late_events"] == len(chunks[0])
+
+
+def test_replay_directory_matches_direct_oracle(world, tmp_path):
+    """Replaying recorded JSONL logs through the fleet = diagnosing the
+    decoded batches directly (same rounding, same anomalies)."""
+    prog, store = world
+    logdir = tmp_path / "logs"
+    os.makedirs(logdir)
+    jobs = {"jobA-gc": SCENARIOS["gc"], "jobB-healthy": []}
+    for job_id, inj in jobs.items():
+        b = ClusterSimulator(N, prog, seed=7, injections=inj).run_batch(5)
+        b.write_jsonl(str(logdir / f"{job_id}.jsonl"))
+    oracle = {}
+    for job_id in jobs:
+        eng = DiagnosticEngine(
+            EngineConfig(backend="dense-train", num_ranks=N), store)
+        eng.ingest_batch(EventBatch.from_jsonl(str(logdir / f"{job_id}.jsonl")))
+        oracle[job_id] = [_sig(a) for a in eng.evaluate_all()]
+    mux = FleetMultiplexer(FleetConfig(watermark_delay=1), history=store)
+    for job_id in jobs:
+        mux.add_job(job_id, EngineConfig(backend="dense-train", num_ranks=N))
+    stats = FleetReplayer(mux, chunk_bytes=1 << 16).replay_dir(str(logdir))
+    got = {j: [] for j in jobs}
+    for fa in mux.poll():
+        got[fa.job_id].append(_sig(fa.anomaly))
+    assert stats.files == 2 and stats.skipped_lines == 0
+    assert stats.events == sum(s["events"] for s in mux.stats().values())
+    for job_id in jobs:
+        assert got[job_id] == oracle[job_id], job_id
+    assert got["jobB-healthy"] == []
+
+
+def test_concurrent_ingest_threads(world):
+    """Jobs fed from separate threads (the daemon deployment shape) still
+    match their single-threaded oracles — per-job locks + locked shared
+    interner/stream."""
+    import threading
+    prog, store = world
+    mux = FleetMultiplexer(FleetConfig(watermark_delay=1), history=store)
+    oracle = {}
+    work = {}
+    for name in ("gc", "underclock", "jitter"):
+        batch = ClusterSimulator(N, prog, seed=7,
+                                 injections=SCENARIOS[name]).run_batch(6)
+        eng = DiagnosticEngine(
+            EngineConfig(backend="dense-train", num_ranks=N), store)
+        eng.ingest_batch(batch)
+        oracle[name] = [_sig(a) for a in eng.evaluate_all()]
+        mux.add_job(name, EngineConfig(backend="dense-train", num_ranks=N))
+        work[name] = _step_chunks(batch)
+    threads = [threading.Thread(
+        target=lambda n=name: [mux.ingest(n, c) for c in work[n]])
+        for name in work]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    got = {name: [] for name in work}
+    for fa in mux.finalize():
+        got[fa.job_id].append(_sig(fa.anomaly))
+    for name in work:
+        assert got[name] == oracle[name], name
+
+
+def test_single_rank_suspect_does_not_declare_fleet_hang():
+    """The hang threshold uses the job-wide rank count (engine config),
+    not the ranks seen so far — one daemon's first drain containing a
+    HANG_SUSPECT must not latch a majority hang on a 64-rank job."""
+    mux = FleetMultiplexer(FleetConfig(watermark_delay=1))
+    mux.add_job("big", EngineConfig(backend="dense-train", num_ranks=64))
+    sus = TraceEvent(EventKind.HANG_SUSPECT, "hang_suspect", 7,
+                     30.0, 30.0, 30.0, step=0,
+                     meta={"stack": ["train_step", "allreduce"]})
+    mux.ingest("big", [sus])
+    assert not mux.job("big").hang_reported
+    assert mux.poll() == []
+    # a majority of the configured ranks reporting DOES declare it
+    mux.ingest("big", [
+        TraceEvent(EventKind.HANG_SUSPECT, "hang_suspect", r,
+                   30.0, 30.0, 30.0, step=0,
+                   meta={"stack": ["train_step", "allreduce"]})
+        for r in range(32)])
+    assert mux.job("big").hang_reported
+    anoms = mux.poll()
+    assert len(anoms) == 1 and anoms[0].anomaly.kind == "hang"
+
+
+def test_daemon_attach_fleet_and_idempotent_stop():
+    mux = FleetMultiplexer(FleetConfig(watermark_delay=0))
+    d = TracingDaemon(DaemonConfig(rank=0, drain_interval=0.01,
+                                   hang_timeout=1e9))
+    d.attach_fleet(mux, "live-job")
+    assert mux.job("live-job").daemon is d
+    d.attach()
+    for s in range(2):
+        d.step_begin(s)
+        d.record_span(EventKind.KERNEL_COMPUTE, "k", 0.0, 1.0, flops=5.0)
+        d.step_end(tokens=16)
+    time.sleep(0.2)
+    d.stop()
+    d.stop()                       # idempotent: second stop is a no-op
+    mux.close()                    # stops daemons again, then finalizes
+    st = mux.stats()["live-job"]
+    assert st["events"] >= 4 and st["ranks"] == 1
+    assert st["steps_evaluated"] >= 1
