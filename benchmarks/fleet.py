@@ -25,8 +25,8 @@ import tempfile
 import time
 
 from benchmarks._util import emit, merge_bench_json
+from repro import store as trace_store
 from repro.configs import get_config
-from repro.core.columnar import EventBatch
 from repro.core.engine import DiagnosticEngine, EngineConfig
 from repro.core.history import HistoryStore
 from repro.core.timeline import (ClusterSimulator, Injection,
@@ -108,17 +108,17 @@ def bench_scale(jobs: int, ranks: int, steps: int) -> dict:
             path = os.path.join(logdir, f"{job_id}.jsonl")
             n = 0
             for c in chunks:
-                c.write_jsonl(path)
+                trace_store.write_trace(c, path)
                 n += len(c)
             log_events[job_id] = n
         one = os.path.join(logdir, next(iter(chunk_lists)) + ".jsonl")
         one_n = log_events[next(iter(chunk_lists))]
 
         t0 = time.perf_counter()
-        EventBatch.from_jsonl(one)
+        trace_store.read_jsonl(one)
         line_s = time.perf_counter() - t0
         t0 = time.perf_counter()
-        EventBatch.from_jsonl_chunked(one, chunk_bytes=4 << 20)
+        trace_store.read_jsonl_chunked(one, chunk_bytes=4 << 20)
         chunk_s = time.perf_counter() - t0
         line_evs, chunk_evs = one_n / line_s, one_n / chunk_s
         emit(f"fleet/decode_line_{label}", 1e6 / line_evs,

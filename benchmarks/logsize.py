@@ -34,6 +34,11 @@ def main():
         flare_path = os.path.join(d, "flare.jsonl")
         flare_bytes = dump_jsonl(events, flare_path)
 
+        from repro import store
+        from repro.core.columnar import EventBatch
+        fcs_bytes = store.write_trace(EventBatch.from_events(events),
+                                      os.path.join(d, "flare.fcs"))
+
         full_path = os.path.join(d, "full.jsonl")
         full_bytes = 0
         with open(full_path, "a") as f:
@@ -51,6 +56,9 @@ def main():
     ratio = full_bytes / max(flare_bytes, 1)
     emit("logsize/flare_MB_per_step", flare_bytes / 1e6 * 1e6,
          f"MB={flare_bytes / 1e6:.3f};paper<=0.78MB")
+    emit("logsize/flare_fcs_MB_per_step", fcs_bytes / 1e6 * 1e6,
+         f"MB={fcs_bytes / 1e6:.3f};"
+         f"ratio={fcs_bytes / max(flare_bytes, 1):.3f}x_of_jsonl")
     emit("logsize/full_profiler_MB_per_step", full_bytes / 1e6 * 1e6,
          f"MB={full_bytes / 1e6:.1f};ratio={ratio:.0f}x;paper~7000x")
     return flare_bytes, full_bytes

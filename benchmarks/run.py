@@ -8,6 +8,8 @@ Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/_util.emit).
   §Scale  -> ingest (columnar pipeline throughput; BENCH_ingest.json)
   §Fleet  -> fleet (multi-job incremental diagnosis + JSONL replay;
              BENCH_fleet.json)
+  §Store  -> storage (JSONL vs FCS bytes/event + replay Mev/s;
+             BENCH_storage.json)
 """
 from __future__ import annotations
 
@@ -18,7 +20,7 @@ import traceback
 def main() -> None:
     from benchmarks import (case2_matmul, fleet, hang, ingest, issue_dist,
                             logsize, overhead, regression, roofline,
-                            vminority)
+                            storage, vminority)
     sections = [
         ("fig8_overhead", overhead.main),
         ("fig9_logsize", logsize.main),
@@ -30,6 +32,7 @@ def main() -> None:
         ("roofline", roofline.main),
         ("scale_ingest", ingest.main),
         ("scale_fleet", fleet.main),
+        ("scale_storage", storage.main),
     ]
     print("name,us_per_call,derived")
     failures = []

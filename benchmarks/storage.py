@@ -1,0 +1,174 @@
+"""Trace-storage codecs: bytes/event and replay throughput, JSONL vs FCS.
+
+Measures, per rank scale:
+  * write: bytes/event on disk for each codec (the continuous-tracing
+    storage bill — ISSUE 3 target: FCS <= 0.3x JSONL);
+  * decode: full-file -> EventBatch Mev/s for JSONL (line, chunked
+    threads, chunked processes) and FCS (memmap segments) — the replay
+    bottleneck the ROADMAP flagged (ISSUE 3 target: FCS >= 5x JSONL);
+  * replay-e2e: ``FleetReplayer.replay_dir`` into a multiplexer with
+    incremental diagnosis, per codec, ASSERTING the anomaly streams are
+    byte-equivalent (the FCS file is written from the JSONL-decoded
+    batch, so both formats carry identical values).
+
+Results merge into ``BENCH_storage.json`` keyed by scale.
+
+    PYTHONPATH=src python benchmarks/storage.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+import tempfile
+import time
+
+from benchmarks._util import emit, merge_bench_json
+from repro import store
+from repro.configs import get_config
+from repro.core.engine import DiagnosticEngine, EngineConfig
+from repro.core.history import HistoryStore
+from repro.core.timeline import (ClusterSimulator, Injection,
+                                 program_from_config)
+from repro.fleet import FleetConfig, FleetMultiplexer, FleetReplayer
+
+OUT_JSON = "BENCH_storage.json"
+
+SCENARIOS = [
+    ("healthy", lambda n: []),
+    ("gc", lambda n: [Injection(kind="gc", duration=0.05, period_ops=4)]),
+    ("underclock", lambda n: [Injection(kind="underclock",
+                                        ranks=(7 % n,), factor=2.4,
+                                        start_step=3)]),
+]
+
+
+def _best(fn, repeat=3):
+    """Best-of-N wall time: deterministic work, noise only slows runs."""
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def bench_scale(ranks: int, steps: int, jobs: int) -> dict:
+    cfg = get_config("llama-20b-paper")
+    prog = program_from_config(cfg, num_chips=ranks)
+    hist = HistoryStore()
+    learner = DiagnosticEngine(
+        EngineConfig(backend="dense-train", num_ranks=ranks), hist)
+    learner.ingest_batch(ClusterSimulator(ranks, prog, seed=1).run_batch(3))
+    learner.learn_healthy()
+    label = f"{ranks}r"
+
+    logdir = tempfile.mkdtemp(prefix="flare_storage_bench_")
+    jdir, fdir = os.path.join(logdir, "jsonl"), os.path.join(logdir, "fcs")
+    os.makedirs(jdir)
+    os.makedirs(fdir)
+    try:
+        # ---- write both codecs (FCS from the JSONL-decoded batch, so
+        # the two directories carry bit-identical event values) -------- #
+        total_events = jsonl_bytes = fcs_bytes = 0
+        for i in range(jobs):
+            name, inj_fn = SCENARIOS[i % len(SCENARIOS)]
+            batch = ClusterSimulator(ranks, prog, seed=100 + i,
+                                     injections=inj_fn(ranks)
+                                     ).run_batch(steps)
+            total_events += len(batch)
+            jp = os.path.join(jdir, f"job{i:02d}-{name}.jsonl")
+            jsonl_bytes += store.write_trace(batch, jp)
+            rounded = store.read_jsonl(jp)
+            fcs_bytes += store.write_trace(
+                rounded, os.path.join(fdir, f"job{i:02d}-{name}.fcs"))
+        per_ev_jsonl = jsonl_bytes / total_events
+        per_ev_fcs = fcs_bytes / total_events
+        size_ratio = fcs_bytes / jsonl_bytes
+        emit(f"storage/bytes_per_event_jsonl_{label}", per_ev_jsonl,
+             f"total={jsonl_bytes}")
+        emit(f"storage/bytes_per_event_fcs_{label}", per_ev_fcs,
+             f"total={fcs_bytes};ratio={size_ratio:.3f}x;target<=0.3x")
+
+        # ---- decode throughput: one job's file, full decode ----------- #
+        one_j = sorted(os.listdir(jdir))[0]
+        one_f = sorted(os.listdir(fdir))[0]
+        jp, fp = os.path.join(jdir, one_j), os.path.join(fdir, one_f)
+        one_n = len(store.read_jsonl(jp))
+
+        decode = {}
+        for key, fn in [
+            ("jsonl_line", lambda: store.read_jsonl(jp)),
+            ("jsonl_chunked", lambda: store.read_jsonl_chunked(
+                jp, chunk_bytes=4 << 20)),
+            ("jsonl_process", lambda: store.read_jsonl_chunked(
+                jp, chunk_bytes=1 << 20, executor="process")),
+            ("fcs", lambda: store.read_fcs(fp)),
+        ]:
+            s, out = _best(fn)
+            decode[key] = one_n / s
+            emit(f"storage/decode_{key}_{label}", 1e6 / decode[key],
+                 f"{decode[key] / 1e6:.2f}Mev_s;events={one_n}")
+        replay_speedup = decode["fcs"] / decode["jsonl_line"]
+        emit(f"storage/fcs_decode_speedup_{label}", 0.0,
+             f"{replay_speedup:.1f}x_vs_jsonl_line;target>=5x")
+
+        # ---- replay e2e (decode + ingest + incremental diagnosis) ----- #
+        def _replay(directory):
+            mux = FleetMultiplexer(FleetConfig(watermark_delay=1),
+                                   history=hist)
+            stats = FleetReplayer(mux, chunk_bytes=4 << 20).replay_dir(
+                directory)
+            return stats, [str(a) for a in mux.poll()]
+
+        t0 = time.perf_counter()
+        sj, anoms_jsonl = _replay(jdir)
+        jsonl_e2e = sj.events / (time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        sf, anoms_fcs = _replay(fdir)
+        fcs_e2e = sf.events / (time.perf_counter() - t0)
+        assert sj.events == sf.events == total_events
+        if anoms_jsonl != anoms_fcs:   # hard equivalence gate (ISSUE 3)
+            raise AssertionError(
+                "fleet diagnosis differs between codecs: "
+                f"jsonl={anoms_jsonl!r} fcs={anoms_fcs!r}")
+        emit(f"storage/replay_e2e_jsonl_{label}", 1e6 / jsonl_e2e,
+             f"{jsonl_e2e / 1e6:.2f}Mev_s;anomalies={len(anoms_jsonl)}")
+        emit(f"storage/replay_e2e_fcs_{label}", 1e6 / fcs_e2e,
+             f"{fcs_e2e / 1e6:.2f}Mev_s;equivalent=TRUE;"
+             f"{fcs_e2e / jsonl_e2e:.1f}x")
+    finally:
+        shutil.rmtree(logdir, ignore_errors=True)
+
+    return {
+        "ranks": ranks, "steps": steps, "jobs": jobs,
+        "events": total_events,
+        "bytes_per_event_jsonl": per_ev_jsonl,
+        "bytes_per_event_fcs": per_ev_fcs,
+        "size_ratio_fcs_vs_jsonl": size_ratio,
+        "decode_events_per_s": decode,
+        "fcs_decode_speedup_vs_jsonl_line": replay_speedup,
+        "replay_e2e_events_per_s": {"jsonl": jsonl_e2e, "fcs": fcs_e2e},
+        "diagnosis_byte_equivalent": True,
+        "anomalies": len(anoms_jsonl),
+    }
+
+
+def main(quick: bool = False):
+    scales = [(64, 4, 2)] if quick else [(256, 8, 3), (512, 6, 3)]
+    results = {}
+    for ranks, steps, jobs in scales:
+        results[f"{ranks}r"] = bench_scale(ranks, steps, jobs)
+    merge_bench_json(OUT_JSON, results)
+    emit("storage/json", 0.0, f"merged={OUT_JSON}")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small scale for CI smoke runs")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    main(quick=args.quick)

@@ -26,8 +26,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
-from repro.core.events import (EventKind, EventRingBuffer, TraceEvent,
-                               dump_jsonl)
+from repro.core.events import EventKind, EventRingBuffer, TraceEvent
 from repro.core.interceptor import PyApiInterceptor
 from repro.core.stack import reconstruct_stacks
 
@@ -41,6 +40,12 @@ class DaemonConfig:
     hang_timeout: float = 30.0
     drain_interval: float = 0.05
     log_path: Optional[str] = None
+    # spill codec: None = infer from log_path extension ("jsonl" default;
+    # a ".fcs" path spills binary columnar segments — see repro.store)
+    log_codec: Optional[str] = None
+    # rotate the spill to <stem>.segNNN<ext> once the current file passes
+    # this size; None = single file forever (historical behavior)
+    log_rotate_bytes: Optional[int] = None
     buffer_capacity: int = 200_000
     reconstruct: bool = True
     enabled: bool = True
@@ -64,7 +69,14 @@ class TracingDaemon:
         self._last_stack: list[str] = []
         self.bytes_logged = 0
         self.events_emitted = 0
+        self.spill_errors = 0
         self._attached = False
+        self._spill = None
+        if self.cfg.log_path:
+            from repro.store import SegmentedTraceWriter
+            self._spill = SegmentedTraceWriter(
+                self.cfg.log_path, codec=self.cfg.log_codec,
+                rotate_bytes=self.cfg.log_rotate_bytes)
 
     # ------------------------------------------------------------------ #
     # lifecycle
@@ -226,7 +238,7 @@ class TracingDaemon:
                 sink(events)
             except Exception:
                 pass
-        if self._batch_sinks:
+        if self._batch_sinks or self._spill is not None:
             from repro.core.columnar import EventBatch
             batch = EventBatch.from_events(events)
             for sink in self._batch_sinks:
@@ -234,8 +246,28 @@ class TracingDaemon:
                     sink(batch)
                 except Exception:
                     pass
-        if self.cfg.log_path:
-            self.bytes_logged += dump_jsonl(events, self.cfg.log_path)
+            if self._spill is not None:
+                # one codec segment (or JSONL line run) per drain; guarded
+                # like the sinks — a spill error (disk full, unserializable
+                # user meta) must not kill the daemon thread, which would
+                # silently end hang-heartbeat detection too.  Counted and
+                # warned once so a permanently failing spill is observable.
+                try:
+                    self.bytes_logged += self._spill.write(batch)
+                except Exception as e:
+                    self.spill_errors += 1
+                    if self.spill_errors == 1:
+                        import warnings
+                        warnings.warn(
+                            f"trace spill to {self.cfg.log_path} failing "
+                            f"({type(e).__name__}: {e}); events continue to "
+                            "stream to sinks but are NOT being persisted",
+                            stacklevel=2)
+
+    @property
+    def log_paths(self) -> list[str]:
+        """Every spill file written so far (>1 once rotation kicks in)."""
+        return list(self._spill.paths) if self._spill is not None else []
 
     def _heartbeat(self):
         now = time.perf_counter()

@@ -1,5 +1,5 @@
 """FLARE fleet subsystem: streaming multi-job multiplexing, incremental
-per-step diagnosis, and chunked JSONL replay (the paper's eight-month,
+per-step diagnosis, and mixed-format log replay (the paper's eight-month,
 6,000-GPU continuous-operation layer).
 
 Quickstart::

@@ -1,13 +1,22 @@
-"""Chunked/parallel JSONL replay of recorded fleet logs.
+"""Offline replay of recorded fleet logs through the multiplexer.
 
-Real deployments accumulate multi-GB JSONL logs per job (daemon
-``log_path`` output, killed jobs included — hence the tolerant decoder).
-Replaying a directory of them through the multiplexer re-runs the exact
-online diagnosis offline: each ``<job_id>.jsonl`` file is split on line
-boundaries, chunks decode into ``EventBatch``es concurrently
-(``columnar.iter_jsonl_chunks``), and every decoded chunk feeds
-``mux.ingest`` in file order so the per-job watermark closes and diagnoses
-steps exactly as it would have live.
+Real deployments accumulate multi-GB trace logs per job — JSONL from the
+historical daemons, FCS segments from the binary spill path, rotated
+``.segNNN`` pieces from long runs — and replaying a directory of them
+re-runs the exact online diagnosis offline.  ``FleetReplayer`` resolves
+the codec per file (extension, then content sniff), so mixed-format
+directories replay in one pass:
+
+  * JSONL files split on line boundaries and decode concurrently
+    (``executor="process"`` scales the json-parse-bound decode past the
+    GIL — ``EventBatch`` pickles cheaply);
+  * FCS files memory-map and stream segment by segment, each segment
+    ingested as step-aligned slices so the per-job watermark closes and
+    diagnoses steps exactly as it would have live (and peak memory stays
+    one step, not one file);
+  * corrupt input is skipped and counted, never fatal: undecodable JSONL
+    lines, truncated FCS tails from killed writers (every intact leading
+    segment still replays), and unreadable files.
 """
 from __future__ import annotations
 
@@ -17,15 +26,25 @@ import time
 from dataclasses import dataclass, field
 from typing import Optional
 
-from repro.core.columnar import iter_jsonl_chunks
 from repro.fleet.multiplexer import FleetMultiplexer
+from repro.store import (CodecError, codec_for_path, codecs,
+                         job_id_for_path, seg_index)
+
+
+def _known_patterns() -> tuple[str, ...]:
+    """One glob per registered codec extension, so a newly registered
+    format replays without touching this module."""
+    return tuple(f"*{ext}" for c in codecs().values()
+                 for ext in c.extensions)
 
 
 @dataclass
 class ReplayStats:
     files: int = 0
     events: int = 0
-    skipped_lines: int = 0
+    skipped_lines: int = 0       # corrupt JSONL lines skipped
+    corrupt_files: int = 0       # files with a CodecError (bad magic,
+    #                              truncated FCS tail, unknown format)
     seconds: float = 0.0
     per_job: dict = field(default_factory=dict)   # job_id -> events
 
@@ -36,37 +55,78 @@ class ReplayStats:
 
 class FleetReplayer:
     def __init__(self, mux: FleetMultiplexer, *, chunk_bytes: int = 8 << 20,
-                 max_workers: Optional[int] = None):
+                 max_workers: Optional[int] = None,
+                 executor: str = "thread"):
         self.mux = mux
         self.chunk_bytes = chunk_bytes
         self.max_workers = max_workers
+        self.executor = executor
 
-    def replay_file(self, job_id: str, path: str) -> tuple[int, int]:
-        """Stream one job's log into the multiplexer chunk by chunk;
-        returns ``(events, skipped_lines)``."""
-        events = skipped = 0
-        for batch, sk in iter_jsonl_chunks(path, chunk_bytes=self.chunk_bytes,
-                                           max_workers=self.max_workers):
-            events += len(batch)
-            skipped += sk
+    def _ingest_step_aligned(self, job_id: str, batch) -> None:
+        """Feed one decoded chunk as per-step slices in step order, so a
+        whole-file segment (FCS, or any codec whose chunks span many
+        steps) advances the watermark incrementally instead of arriving
+        as one monolithic batch.  Single-step chunks — the common JSONL
+        case — pass straight through."""
+        order, uniq, bounds = batch.step_index()
+        if uniq.size <= 1:
             self.mux.ingest(job_id, batch)
+            return
+        for j in range(uniq.size):
+            self.mux.ingest(job_id, batch.take(order[bounds[j]:bounds[j + 1]]))
+
+    def replay_file(self, job_id: str, path: str,
+                    stats: Optional[ReplayStats] = None) -> tuple[int, int]:
+        """Stream one job's log into the multiplexer chunk by chunk;
+        returns ``(events, skipped_lines)``.  A ``CodecError`` mid-file
+        (truncated FCS tail) keeps everything already ingested and is
+        counted on ``stats`` instead of raising."""
+        codec = codec_for_path(path)
+        events = skipped = 0
+        try:
+            for batch, sk in codec.iter_chunks(
+                    path, chunk_bytes=self.chunk_bytes,
+                    max_workers=self.max_workers, executor=self.executor):
+                events += len(batch)
+                skipped += sk
+                self._ingest_step_aligned(job_id, batch)
+        except CodecError:
+            if stats is None:
+                raise
+            stats.corrupt_files += 1
         return events, skipped
 
-    def replay_dir(self, directory: str, *, pattern: str = "*.jsonl",
+    def replay_dir(self, directory: str, *, pattern: Optional[str] = None,
                    flush: bool = True) -> ReplayStats:
-        """Replay every ``pattern`` file in ``directory`` (job id = file
-        stem), then flush the fleet so trailing steps and hangs are
-        diagnosed.  Anomalies are left in the multiplexer's stream for the
-        caller to ``poll()``.  Returns throughput stats."""
+        """Replay every trace file in ``directory`` (all registered
+        formats when ``pattern`` is None), then flush the fleet so
+        trailing steps and hangs are diagnosed.  Rotated spill files
+        (``job.fcs``, ``job.seg001.fcs``, …) replay into one job, in
+        order; files that fail to decode are skipped and counted.
+        Anomalies are left in the multiplexer's stream for the caller to
+        ``poll()``.  Returns throughput stats."""
+        patterns = (pattern,) if pattern is not None else _known_patterns()
+        # numeric rotation order: lexicographic sorting would put
+        # seg1000 before seg999 on months-long streams
+        paths = sorted({p for pat in patterns
+                        for p in glob.glob(os.path.join(directory, pat))},
+                       key=lambda p: (job_id_for_path(p), seg_index(p), p))
         stats = ReplayStats()
         t0 = time.perf_counter()
-        for path in sorted(glob.glob(os.path.join(directory, pattern))):
-            job_id = os.path.splitext(os.path.basename(path))[0]
-            ev, sk = self.replay_file(job_id, path)
+        for path in paths:
+            job_id = job_id_for_path(path)
+            pre_corrupt = stats.corrupt_files
+            try:
+                ev, sk = self.replay_file(job_id, path, stats)
+            except CodecError:
+                stats.corrupt_files += 1
+                continue
+            if ev == 0 and stats.corrupt_files > pre_corrupt:
+                continue               # nothing usable before the corruption
             stats.files += 1
             stats.events += ev
             stats.skipped_lines += sk
-            stats.per_job[job_id] = ev
+            stats.per_job[job_id] = stats.per_job.get(job_id, 0) + ev
         if flush:
             self.mux.flush()
         stats.seconds = time.perf_counter() - t0

@@ -1,0 +1,52 @@
+"""Pluggable trace storage: codec registry + on-disk formats.
+
+Usage::
+
+    from repro import store
+
+    store.get_codec("fcs").write(batch, "job-a.fcs")     # append a segment
+    batch = store.read_trace("logs/job-a.fcs")           # format-detected
+    for chunk, skipped in store.iter_trace_chunks(path): ...
+
+See ``src/repro/store/README.md`` for the FCS on-disk layout.
+"""
+from repro.store.base import (CodecError, TraceCodec, codec_for_path,
+                              codecs, get_codec, register_codec,
+                              sniff_format)
+from repro.store.fcs import FcsCodec, read_fcs, write_fcs
+from repro.store.jsonl import (JsonlCodec, iter_jsonl_chunks, read_jsonl,
+                               read_jsonl_chunked)
+from repro.store.writer import (SegmentedTraceWriter, job_id_for_path,
+                                seg_index, seg_path)
+
+JSONL = register_codec(JsonlCodec())
+FCS = register_codec(FcsCodec())
+
+
+def read_trace(path: str, *, codec: str | None = None,
+               with_skip_count: bool = False):
+    """Decode a whole trace file with an explicit or auto-detected codec."""
+    c = get_codec(codec) if codec else codec_for_path(path)
+    return c.read(path, with_skip_count=with_skip_count)
+
+
+def write_trace(batch, path: str, *, codec: str | None = None) -> int:
+    """Append ``batch`` to ``path``; returns bytes written."""
+    c = get_codec(codec) if codec else codec_for_path(path, default="jsonl")
+    return c.write(batch, path)
+
+
+def iter_trace_chunks(path: str, *, codec: str | None = None, **opts):
+    """Stream ``(EventBatch, skipped)`` chunks in file order."""
+    c = get_codec(codec) if codec else codec_for_path(path)
+    return c.iter_chunks(path, **opts)
+
+
+__all__ = [
+    "CodecError", "TraceCodec", "JsonlCodec", "FcsCodec", "JSONL", "FCS",
+    "register_codec", "get_codec", "codecs", "codec_for_path",
+    "sniff_format", "read_trace", "write_trace", "iter_trace_chunks",
+    "read_jsonl", "read_jsonl_chunked", "iter_jsonl_chunks", "read_fcs",
+    "write_fcs", "SegmentedTraceWriter", "seg_path", "seg_index",
+    "job_id_for_path",
+]

@@ -1,0 +1,464 @@
+"""FCS — Flare Columnar Segment: numpy-native binary trace storage.
+
+JSONL replay is json-parse-bound (~0.1 Mev/s/core); a fleet that records
+for months needs a format whose decode cost is ~zero.  FCS writes the
+``EventBatch`` columns themselves: each ``write`` call appends one
+self-contained *segment* — a small header, interning tables, and raw
+little-endian column slabs — so reading is a header parse plus
+``np.frombuffer`` views straight off an ``np.memmap`` (timestamp slabs
+are zero-copy; narrowed columns pay one vectorized ``astype``).  No
+per-row work, ever.
+
+Compactness comes from per-column encodings picked at write time, all
+lossless:
+
+  ABSENT  column is all-null (0 bytes)
+  CONST   all rows equal (one value)
+  RAW     narrowest integer dtype that fits the value range
+  DICT    value table + per-row codes (flops/bytes/tokens carry a handful
+          of distinct per-op values across millions of rows; float tables
+          are stored as raw u64 bit patterns so NaN round-trips exactly)
+  SAMEAS  column is bit-identical to another (CPU spans: issue == start)
+
+``extra`` meta dicts are dict-encoded too: a table of unique dicts
+(Python-literal ``repr`` when it round-trips — preserving tuples exactly,
+which JSON cannot — else JSON) plus sparse (row, code) index columns.
+
+The exact byte layout is documented in ``src/repro/store/README.md``.
+Corruption (bad magic, unknown version, a truncated tail from a killed
+writer) raises :class:`~repro.store.base.CodecError` with file + byte
+offset; ``iter_chunks`` yields every intact leading segment first so
+replay can skip-and-count the broken tail.
+"""
+from __future__ import annotations
+
+import ast
+import json
+import mmap
+import os
+import struct
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.core.columnar import NO_INT, EventBatch
+from repro.store.base import CodecError
+
+MAGIC = b"FCS1"
+VERSION = 1
+
+# header: magic, version, ncols, n_rows, seg_len, names_len, groups_len,
+# extra_len — 48 bytes, so the blob region after it stays 8-aligned.
+_HEADER = struct.Struct("<4sHHQQQQQ")
+_DIRENT = struct.Struct("<BBBBI")        # col_id, enc, dtype/src, 0, len
+
+# encodings
+ENC_ABSENT, ENC_CONST, ENC_RAW, ENC_DICT, ENC_SAMEAS = range(5)
+
+# storage dtypes (little-endian), ordered by itemsize for narrowing
+_DTYPES = ("<u1", "<i1", "<u2", "<i2", "<u4", "<i4", "<i8", "<f8")
+_DT_CODE = {dt: i for i, dt in enumerate(_DTYPES)}
+_U64 = np.dtype("<u8")
+
+# column table: (slot, runtime dtype, null value, wide storage dtype)
+# the two trailing pseudo-columns hold the sparse extra-dict index.
+_COLUMNS = (
+    ("kind",     np.uint8,   0,       "<u1"),
+    ("name_id",  np.int32,   0,       "<i4"),
+    ("rank",     np.int32,   0,       "<i4"),
+    ("issue_ts", np.float64, 0.0,     "<f8"),
+    ("start_ts", np.float64, 0.0,     "<f8"),
+    ("end_ts",   np.float64, 0.0,     "<f8"),
+    ("step",     np.int32,   -1,      "<i4"),
+    ("flops",    np.float64, np.nan,  "<f8"),
+    ("nbytes",   np.int64,   NO_INT,  "<i8"),
+    ("tokens",   np.int64,   NO_INT,  "<i8"),
+    ("group_id", np.int16,   -1,      "<i2"),
+    ("_extra_rows",  np.int64, 0, "<i8"),
+    ("_extra_codes", np.int64, 0, "<i8"),
+)
+NCOLS = len(_COLUMNS)
+_TS_COLS = (3, 4, 5)
+_VALUE_COLS = (7, 8, 9)       # sparse numeric meta: DICT-friendly
+
+
+def _pad8(n: int) -> int:
+    return -n % 8
+
+
+def _narrowest(mn: int, mx: int) -> str:
+    for dt in ("<u1", "<i1", "<u2", "<i2", "<u4", "<i4", "<i8"):
+        info = np.iinfo(dt)
+        if info.min <= mn and mx <= info.max:
+            return dt
+    return "<i8"
+
+
+def _code_dtype(n_values: int) -> str:
+    return "<u1" if n_values <= 0xFF else \
+           "<u2" if n_values <= 0xFFFF else "<u4"
+
+
+# --------------------------------------------------------------------- #
+# encode
+# --------------------------------------------------------------------- #
+def _encode_int_col(arr: np.ndarray, *, allow_const: bool = True
+                    ) -> tuple[int, str, bytes]:
+    """(enc, storage dtype, payload) for an integer column.  The sparse
+    extra index columns pass ``allow_const=False``: their length is not
+    ``n_rows``, so the decoder must be able to derive it from the payload
+    size (RAW only)."""
+    if arr.size == 0:
+        return ENC_ABSENT, "<u1", b""
+    mn, mx = int(arr.min()), int(arr.max())
+    dt = _narrowest(mn, mx)
+    if mn == mx and allow_const:
+        return ENC_CONST, dt, arr[:1].astype(dt).tobytes()
+    return ENC_RAW, dt, arr.astype(dt).tobytes()
+
+
+def _encode_value_col(arr: np.ndarray, null, wide: str
+                      ) -> tuple[int, str, bytes]:
+    """flops/nbytes/tokens: ABSENT / CONST / DICT / RAW over full-width
+    values.  Floats are dict-encoded as u64 bit patterns so NaN behaves
+    like any other value (bit-exact, one table slot)."""
+    n = arr.size
+    is_f = arr.dtype.kind == "f"
+    if n == 0:
+        return ENC_ABSENT, "<u1", b""
+    if is_f:
+        if bool(np.isnan(arr).all()):
+            return ENC_ABSENT, "<u1", b""
+    elif bool((arr == null).all()):
+        return ENC_ABSENT, "<u1", b""
+    bits = arr.view(_U64) if is_f else arr
+    table, codes = np.unique(bits, return_inverse=True)
+    if table.size == 1:
+        return ENC_CONST, wide, arr[:1].astype(wide).tobytes()
+    cdt = _code_dtype(table.size)
+    dict_size = 4 + table.size * 8 + n * np.dtype(cdt).itemsize
+    if dict_size < n * 8:
+        payload = (struct.pack("<I", table.size)
+                   + table.astype("<u8" if is_f else "<i8").tobytes()
+                   + codes.astype(cdt).tobytes())
+        return ENC_DICT, cdt, payload
+    return ENC_RAW, wide, arr.astype(wide).tobytes()
+
+
+def _encode_ts_col(arr: np.ndarray, col_id: int, batch: EventBatch
+                   ) -> tuple[int, str, bytes]:
+    if arr.size == 0:
+        return ENC_ABSENT, "<u1", b""
+    # start_ts (col 4) is the canonical timeline; issue/end frequently
+    # alias it bit-for-bit (CPU spans, hang markers)
+    if col_id != 4 and np.array_equal(arr, batch.start_ts):
+        return ENC_SAMEAS, "<f8", b""
+    if bool((arr == arr[0]).all()):
+        return ENC_CONST, "<f8", arr[:1].astype("<f8").tobytes()
+    return ENC_RAW, "<f8", arr.astype("<f8").tobytes()
+
+
+def _encode_extra(batch: EventBatch
+                  ) -> tuple[bytes, np.ndarray, np.ndarray]:
+    """Dedupe the row->dict table: returns (json table blob, rows, codes).
+
+    Unique dicts (by identity first — the daemon shares one meta dict
+    across a whole rank-vector — then by serialized form) are stored once
+    as ``p:<repr>`` when ``ast.literal_eval`` round-trips (tuples survive)
+    or ``j:<json>`` otherwise."""
+    if not batch.extra:
+        return b"", np.empty(0, np.int64), np.empty(0, np.int64)
+    table: list[str] = []
+    code_by_key: dict[str, int] = {}
+    code_by_id: dict[int, int] = {}
+    rows = np.fromiter(sorted(batch.extra), np.int64, len(batch.extra))
+    codes = np.empty(rows.size, np.int64)
+    for i, row in enumerate(rows.tolist()):
+        d = batch.extra[row]
+        c = code_by_id.get(id(d))
+        if c is None:
+            key = _serialize_meta(d)
+            c = code_by_key.get(key)
+            if c is None:
+                c = code_by_key[key] = len(table)
+                table.append(key)
+            code_by_id[id(d)] = c
+        codes[i] = c
+    return json.dumps(table, separators=(",", ":")).encode(), rows, codes
+
+
+def _serialize_meta(d: dict) -> str:
+    r = repr(d)
+    try:
+        if ast.literal_eval(r) == d:
+            return "p:" + r
+    except (ValueError, SyntaxError, MemoryError):
+        pass
+    try:
+        return "j:" + json.dumps(d)
+    except (TypeError, ValueError) as e:
+        raise CodecError(f"meta dict not serializable for FCS: {d!r} "
+                         f"({e})") from e
+
+
+def _deserialize_meta(s: str) -> dict:
+    if s.startswith("p:"):
+        return ast.literal_eval(s[2:])
+    return json.loads(s[2:])
+
+
+def encode_segment(batch: EventBatch) -> bytes:
+    """One self-contained segment for ``batch`` (appendable bytes)."""
+    n = len(batch)
+    names_blob = json.dumps(batch.names, separators=(",", ":")).encode() \
+        if batch.names else b""
+    groups_blob = json.dumps(batch.groups, separators=(",", ":")).encode() \
+        if batch.groups else b""
+    extra_blob, extra_rows, extra_codes = _encode_extra(batch)
+
+    entries: list[bytes] = []
+    payloads: list[bytes] = []
+    cols = (batch.kind, batch.name_id, batch.rank, batch.issue_ts,
+            batch.start_ts, batch.end_ts, batch.step, batch.flops,
+            batch.nbytes, batch.tokens, batch.group_id,
+            extra_rows, extra_codes)
+    for col_id, ((_, _, null, wide), arr) in enumerate(zip(_COLUMNS, cols)):
+        if col_id in _TS_COLS:
+            enc, dt, payload = _encode_ts_col(arr, col_id, batch)
+        elif col_id in _VALUE_COLS:
+            enc, dt, payload = _encode_value_col(arr, null, wide)
+        else:
+            enc, dt, payload = _encode_int_col(arr, allow_const=col_id < 11)
+        # SAMEAS stores the source column id (always start_ts) in the
+        # dtype slot
+        dt_byte = 4 if enc == ENC_SAMEAS else _DT_CODE[dt]
+        entries.append(_DIRENT.pack(col_id, enc, dt_byte, 0, len(payload)))
+        payloads.append(payload + b"\0" * _pad8(len(payload)))
+
+    blob = names_blob + groups_blob + extra_blob
+    body = blob + b"\0" * _pad8(len(blob)) + b"".join(entries) \
+        + b"".join(payloads)
+    seg_len = _HEADER.size + len(body)
+    header = _HEADER.pack(MAGIC, VERSION, NCOLS, n, seg_len,
+                          len(names_blob), len(groups_blob),
+                          len(extra_blob))
+    return header + body
+
+
+# --------------------------------------------------------------------- #
+# decode
+# --------------------------------------------------------------------- #
+def _view(buf, dtype: str, count: int, offset: int,
+          path: Optional[str] = None) -> np.ndarray:
+    try:
+        return np.frombuffer(buf, dtype, count, offset)
+    except ValueError as e:
+        raise CodecError(f"column slab out of bounds ({e})",
+                         path=path, offset=offset) from e
+
+
+def decode_segment(buf, off: int, path: str) -> tuple[EventBatch, int]:
+    """Decode one segment of ``buf`` starting at byte ``off``; returns
+    ``(batch, next_offset)``.  Raises :class:`CodecError` on a bad magic,
+    unsupported version, or a slab truncated by a killed writer."""
+    size = len(buf)
+    if off + _HEADER.size > size:
+        raise CodecError("truncated segment header "
+                         f"({size - off} bytes left, need {_HEADER.size})",
+                         path=path, offset=off)
+    magic, version, ncols, n, seg_len, names_len, groups_len, extra_len = \
+        _HEADER.unpack_from(buf, off)
+    if magic != MAGIC:
+        raise CodecError(f"bad magic {magic!r} (expected {MAGIC!r})",
+                         path=path, offset=off)
+    if version != VERSION:
+        raise CodecError(f"unsupported FCS version {version}",
+                         path=path, offset=off)
+    if ncols < NCOLS:
+        raise CodecError(f"segment declares {ncols} columns, need {NCOLS}",
+                         path=path, offset=off)
+    if seg_len < _HEADER.size:
+        raise CodecError(f"implausible segment length {seg_len}",
+                         path=path, offset=off)
+    if off + seg_len > size:
+        raise CodecError("truncated segment: partial slab "
+                         f"(need {seg_len} bytes, {size - off} left)",
+                         path=path, offset=off)
+
+    p = off + _HEADER.size
+    try:
+        names = json.loads(bytes(buf[p:p + names_len]) or b"[]")
+        groups = json.loads(
+            bytes(buf[p + names_len:p + names_len + groups_len]) or b"[]")
+        eb = bytes(buf[p + names_len + groups_len:
+                       p + names_len + groups_len + extra_len])
+        extra_table = [_deserialize_meta(s) for s in json.loads(eb)] \
+            if eb else []
+    except (ValueError, SyntaxError) as e:
+        raise CodecError(f"corrupt interning/meta tables ({e})",
+                         path=path, offset=p) from e
+    blob = names_len + groups_len + extra_len
+    p += blob + _pad8(blob)
+    if p + ncols * _DIRENT.size > off + seg_len:
+        raise CodecError("column directory overruns segment "
+                         "(corrupt blob lengths)", path=path, offset=p)
+
+    arrays: list[Optional[np.ndarray]] = [None] * NCOLS
+    sameas: list[tuple[int, int]] = []
+    pay = p + ncols * _DIRENT.size
+    for i in range(ncols):
+        col_id, enc, dt_byte, _, plen = _DIRENT.unpack_from(
+            buf, p + i * _DIRENT.size)
+        if pay + plen > off + seg_len:
+            raise CodecError(f"column {col_id} slab overruns segment",
+                             path=path, offset=pay)
+        if col_id >= NCOLS:      # forward-compat: ignore unknown columns
+            pay += plen + _pad8(plen)
+            continue
+        _, rdtype, null, _wide = _COLUMNS[col_id]
+
+        def _need(expected: int):
+            # a corrupted length field must fail loudly here: frombuffer
+            # reads from `pay` regardless of plen while `pay` advances BY
+            # plen, so a mismatch would silently shift every later column
+            if plen != expected:
+                raise CodecError(
+                    f"column {col_id} slab length {plen} != expected "
+                    f"{expected} for encoding {enc}", path=path, offset=pay)
+
+        if enc == ENC_ABSENT:
+            _need(0)
+            # the sparse extra index columns (11, 12) carry their own
+            # length; every real column has n_rows entries
+            arrays[col_id] = np.empty(0, np.int64) if col_id >= 11 \
+                else np.full(n, null, rdtype)
+        elif enc == ENC_SAMEAS:
+            _need(0)
+            sameas.append((col_id, dt_byte))
+        elif enc == ENC_CONST:
+            dt = _DTYPES[dt_byte]
+            _need(np.dtype(dt).itemsize)
+            arrays[col_id] = np.full(n, _view(buf, dt, 1, pay, path)[0],
+                                     rdtype)
+        elif enc == ENC_RAW:
+            dt = _DTYPES[dt_byte]
+            isz = np.dtype(dt).itemsize
+            if col_id < 11:
+                _need(n * isz)
+                cnt = n
+            else:
+                if plen % isz:
+                    raise CodecError(f"column {col_id} slab length {plen} "
+                                     f"not a multiple of itemsize {isz}",
+                                     path=path, offset=pay)
+                cnt = plen // isz
+            a = _view(buf, dt, cnt, pay, path)
+            arrays[col_id] = a if a.dtype == np.dtype(rdtype) \
+                else a.astype(rdtype)
+        elif enc == ENC_DICT:
+            cdt = _DTYPES[dt_byte]
+            if plen < 4:
+                raise CodecError(f"column {col_id} DICT payload too short",
+                                 path=path, offset=pay)
+            (ntab,) = struct.unpack_from("<I", buf, pay)
+            _need(4 + ntab * 8 + n * np.dtype(cdt).itemsize)
+            is_f = np.dtype(rdtype).kind == "f"
+            table = _view(buf, "<u8" if is_f else "<i8", ntab, pay + 4, path)
+            codes = _view(buf, cdt, n, pay + 4 + ntab * 8, path)
+            if codes.size and int(codes.max()) >= ntab:
+                raise CodecError(f"column {col_id} DICT code "
+                                 f"{int(codes.max())} out of table range "
+                                 f"{ntab}", path=path, offset=pay)
+            out = table[codes]
+            arrays[col_id] = out.view(np.float64) if is_f \
+                else out.astype(rdtype, copy=False)
+        else:
+            raise CodecError(f"unknown encoding {enc} for column {col_id}",
+                             path=path, offset=pay)
+        pay += plen + _pad8(plen)
+    for col_id, src in sameas:
+        if arrays[src] is None:
+            raise CodecError(f"SAMEAS column {col_id} references "
+                             f"unresolved column {src}", path=path, offset=off)
+        arrays[col_id] = arrays[src]
+
+    extra: dict[int, dict] = {}
+    rows_a, codes_a = arrays[11], arrays[12]
+    if rows_a is not None and rows_a.size:
+        for r, c in zip(rows_a.tolist(), codes_a.tolist()):
+            try:
+                extra[int(r)] = extra_table[int(c)]
+            except IndexError:
+                raise CodecError(f"extra code {c} out of table range",
+                                 path=path, offset=off) from None
+    batch = EventBatch(arrays[0], arrays[1], arrays[2], arrays[3],
+                       arrays[4], arrays[5], arrays[6], arrays[7],
+                       arrays[8], arrays[9], arrays[10],
+                       list(names), list(groups), extra)
+    return batch, off + seg_len
+
+
+def _open_buffer(path: str, use_mmap: bool):
+    """Map (or read) the file; a memory-map keeps decoded column views
+    zero-copy, and the views hold a reference to the map so they stay
+    valid after every file handle is closed."""
+    with open(path, "rb") as f:
+        if not use_mmap:
+            return f.read()
+        size = os.fstat(f.fileno()).st_size
+        if size == 0:
+            return b""
+        return mmap.mmap(f.fileno(), 0, access=mmap.ACCESS_READ)
+
+
+def iter_segments(path: str, *, use_mmap: bool = True
+                  ) -> Iterator[EventBatch]:
+    """Yield each intact segment in file order; raises
+    :class:`CodecError` at the first corrupt one (after yielding every
+    good segment before it).  Bit-rot that slips past the structural
+    checks (e.g. a flipped dtype byte making a slab misparse) is
+    rewrapped so replay's skip-and-count contract holds."""
+    buf = _open_buffer(path, use_mmap)
+    off = 0
+    size = len(buf)
+    while off < size:
+        try:
+            batch, off = decode_segment(buf, off, path)
+        except CodecError:
+            raise
+        except (struct.error, IndexError, ValueError, KeyError) as e:
+            raise CodecError(f"corrupt segment ({type(e).__name__}: {e})",
+                             path=path, offset=off) from e
+        yield batch
+
+
+def read_fcs(path: str, *, with_skip_count: bool = False,
+             use_mmap: bool = True):
+    """Decode a whole (possibly multi-segment) file into one batch."""
+    parts = list(iter_segments(path, use_mmap=use_mmap))
+    batch = parts[0] if len(parts) == 1 else EventBatch.concat(parts)
+    return (batch, 0) if with_skip_count else batch
+
+
+def write_fcs(batch: EventBatch, path: str) -> int:
+    """Append one segment; returns bytes written."""
+    seg = encode_segment(batch)
+    with open(path, "ab") as f:
+        f.write(seg)
+    return len(seg)
+
+
+class FcsCodec:
+    name = "fcs"
+    extensions = (".fcs",)
+
+    def write(self, batch: EventBatch, path: str) -> int:
+        return write_fcs(batch, path)
+
+    def read(self, path: str, *, with_skip_count: bool = False):
+        return read_fcs(path, with_skip_count=with_skip_count)
+
+    def iter_chunks(self, path: str, **_ignored
+                    ) -> Iterator[tuple[EventBatch, int]]:
+        for batch in iter_segments(path):
+            yield batch, 0
