@@ -8,7 +8,11 @@ Measures, per (jobs x ranks x steps) scale:
   * replay-decode: chunked/parallel ``EventBatch.from_jsonl_chunked``
     vs the line-by-line decoder on one job's log;
   * replay-e2e: ``FleetReplayer.replay_dir`` over every job's JSONL log
-    into a fresh multiplexer (decode + ingest + incremental diagnosis).
+    into a fresh multiplexer (decode + ingest + incremental diagnosis);
+  * crossjob: a rack-degradation fleet (half the jobs jittering on shared
+    racks) with the ``cross_job_failslow`` fleet detector registered —
+    the cross-job correlation tier's overhead on the same ingest path,
+    plus the count of INFRASTRUCTURE reclassifications it emits.
 
 Acceptance (ISSUE 2): >= 8 concurrent jobs at 256+ ranks each with
 incremental diagnosis sustaining >= 1 Mev/s aggregate.  Results merge into
@@ -149,12 +153,76 @@ def bench_scale(jobs: int, ranks: int, steps: int) -> dict:
     }
 
 
+def bench_crossjob(jobs: int, ranks: int, steps: int) -> dict:
+    """Rack-degradation fleet: the first half of the jobs jitter on shared
+    racks (two jobs per rack), the rest stay healthy.  Times the same
+    round-robin ingest WITH the fleet-scope correlator registered and
+    checks it actually reclassifies every afflicted rack."""
+    cfg = get_config("llama-20b-paper")
+    prog = program_from_config(cfg, num_chips=ranks)
+    store = HistoryStore()
+    learner = DiagnosticEngine(
+        EngineConfig(backend="dense-train", num_ranks=ranks), store)
+    learner.ingest_batch(ClusterSimulator(ranks, prog, seed=1).run_batch(3))
+    learner.learn_healthy()
+
+    chunk_lists, total_events, topo = {}, 0, {}
+    n_slow = max(jobs // 2, 2)
+    for i in range(jobs):
+        inj = [Injection(kind="network_jitter", factor=3.0, start_step=3)] \
+            if i < n_slow else []
+        sim = ClusterSimulator(ranks, prog, seed=300 + i, injections=inj)
+        batch = sim.run_batch(steps)
+        job_id = f"cj{i:02d}-{'jitter' if i < n_slow else 'healthy'}"
+        order, uniq, bounds = batch.step_index()
+        chunk_lists[job_id] = [batch.take(order[bounds[j]:bounds[j + 1]])
+                               for j in range(uniq.size)]
+        topo[job_id] = {"rack": f"rack{i // 2}", "switch": f"sw{i // 4}"}
+        total_events += len(batch)
+    label = f"{jobs}j_{ranks}r"
+
+    best_s, reclass, fleet_anoms = float("inf"), 0, 0
+    for _ in range(3):
+        mux = FleetMultiplexer(FleetConfig(
+            watermark_delay=1, fleet_detectors=["cross_job_failslow"],
+            topology=topo), history=store)
+        for job_id in chunk_lists:
+            mux.add_job(job_id, EngineConfig(backend="dense-train",
+                                             num_ranks=ranks))
+        t0 = time.perf_counter()
+        pending = {j: list(c) for j, c in chunk_lists.items()}
+        while any(pending.values()):
+            for job_id, chunks in pending.items():
+                if chunks:
+                    mux.ingest(job_id, chunks.pop(0))
+        out = mux.finalize()
+        best_s = min(best_s, time.perf_counter() - t0)
+        fleet_anoms = len(out)
+        reclass = sum(1 for fa in out if fa.origin == "fleet")
+    assert reclass >= 2 * (n_slow // 2), \
+        f"correlator reclassified {reclass}, expected >= {2 * (n_slow // 2)}"
+    evs = total_events / best_s
+    emit(f"fleet/crossjob_{label}", 1e6 / evs,
+         f"{evs / 1e6:.2f}Mev_s;events={total_events};"
+         f"reclassified={reclass}")
+    return {
+        "jobs": jobs, "ranks": ranks, "steps": steps,
+        "events": total_events,
+        "anomalies": fleet_anoms,
+        "fleet_reclassified": reclass,
+        "crossjob_diagnose_events_per_s": evs,
+    }
+
+
 def main(quick: bool = False):
     scales = [(4, 64, 4)] if quick else [(8, 256, 8), (12, 256, 8)]
     results = {}
     for jobs, ranks, steps in scales:
         r = bench_scale(jobs, ranks, steps)
         results[f"{jobs}x{ranks}x{steps}"] = r
+    cj_jobs, cj_ranks, cj_steps = (4, 64, 6) if quick else (8, 256, 8)
+    results[f"crossjob_{cj_jobs}x{cj_ranks}x{cj_steps}"] = \
+        bench_crossjob(cj_jobs, cj_ranks, cj_steps)
     merge_bench_json(OUT_JSON, results)
     emit("fleet/json", 0.0, f"merged={OUT_JSON}")
     return results

@@ -8,6 +8,12 @@ Anomalies surface incrementally with job tags and team routing as each
 job's watermark closes steps; the hung job is diagnosed the moment a
 majority of its daemons report.
 
+The fleet-scope detector tier is on: every job is placed on a rack
+(``mux.set_topology``) and the registered ``cross_job_failslow``
+correlator watches the merged stream — the two jitter-afflicted jobs
+sharing rack0 are reclassified from per-job operations findings to a
+shared-rack INFRASTRUCTURE diagnosis (``origin="fleet"`` lines).
+
     PYTHONPATH=src python examples/diagnose_fleet.py --jobs 6 --ranks 128
 """
 import argparse
@@ -21,8 +27,13 @@ from repro.fleet import FleetConfig, FleetMultiplexer
 
 
 def job_scenarios(n_jobs: int, num_ranks: int):
-    """Cycle through the paper's anomaly classes across the fleet."""
+    """Cycle through the paper's anomaly classes across the fleet.  The
+    first two slots are network jitter ON THE SAME RACK — the cross-job
+    correlator's bread and butter."""
+    jitter = [Injection(kind="network_jitter", factor=3.0, start_step=3)]
     templates = [
+        ("net-jitter", jitter),
+        ("net-jitter", jitter),
         ("healthy", []),
         ("gc-stalls", [Injection(kind="gc", duration=0.05, period_ops=4)]),
         ("underclock", [Injection(kind="underclock",
@@ -30,8 +41,6 @@ def job_scenarios(n_jobs: int, num_ranks: int):
                                   start_step=3)]),
         ("misaligned-ffn", [Injection(kind="slow_compute",
                                       op_match="ffn_matmul", factor=2.9)]),
-        ("net-jitter", [Injection(kind="network_jitter", factor=3.0,
-                                  start_step=3)]),
         ("comm-hang", [Injection(kind="hang", ranks=(611 % num_ranks,),
                                  at_step=2)]),
     ]
@@ -58,14 +67,21 @@ def main():
     learn.learn_healthy()
 
     shapes = {f"ffn_matmul[{g}]": (8192, 8484) for g in range(6)}
-    mux = FleetMultiplexer(FleetConfig(watermark_delay=1), history=store)
+    # fleet-scope tier: the cross-job fail-slow correlator, resolved by
+    # registry name exactly like the per-job detector set
+    mux = FleetMultiplexer(FleetConfig(
+        watermark_delay=1, fleet_detectors=["cross_job_failslow"]),
+        history=store)
 
     # run every job's simulator, pre-split into per-step chunks (each chunk
     # stands in for one drain of that job's daemons)
     chunks = {}
-    for job_id, inj in job_scenarios(args.jobs, N):
+    for i, (job_id, inj) in enumerate(job_scenarios(args.jobs, N)):
         mux.add_job(job_id, EngineConfig(backend="dense-train", num_ranks=N,
                                          kernel_shapes=shapes))
+        # placement: jobs 0 and 1 (both jittery) share rack0
+        mux.set_topology(job_id, rack="rack0" if i < 2 else f"rack{i}",
+                         switch=f"sw{i // 2}")
         batch = ClusterSimulator(N, prog, seed=77,
                                  injections=inj).run_batch(args.steps)
         order, uniq, bounds = batch.step_index()

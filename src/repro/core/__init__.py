@@ -1,4 +1,6 @@
 """FLARE: full-stack tracing daemon + diagnostic engine (the paper's core)."""
 from repro.core.events import EventKind, TraceEvent  # noqa: F401
 from repro.core.daemon import TracingDaemon, DaemonConfig, attach, get_daemon  # noqa: F401
-from repro.core.engine import Anomaly, DiagnosticEngine, Team  # noqa: F401
+from repro.core.engine import Anomaly, DiagnosticEngine, EngineConfig, Team  # noqa: F401
+from repro.core.detectors import (Detector, DetectorSpec,  # noqa: F401
+                                  register_detector)

@@ -176,6 +176,32 @@ class EventBatch:
             self.tokens[rows], self.group_id[rows],
             self.names, self.groups, extra)
 
+    def slice_rows(self, lo: int, hi: int) -> "EventBatch":
+        """Contiguous row range ``[lo, hi)`` as ZERO-COPY column views
+        (numpy basic slicing) sharing the interning tables.  This is the
+        replay fast path for step-sorted batches — an FCS segment decodes
+        to memmap-backed columns, and its per-step slices reach the
+        engine as views of the map instead of per-step ``take`` copies.
+        Views keep the parent's buffers (and any backing memmap) alive.
+        """
+        extra: dict[int, dict] = {}
+        if self.extra:
+            for r, d in self.extra.items():
+                if lo <= r < hi:
+                    extra[r - lo] = d
+        return EventBatch(
+            self.kind[lo:hi], self.name_id[lo:hi], self.rank[lo:hi],
+            self.issue_ts[lo:hi], self.start_ts[lo:hi], self.end_ts[lo:hi],
+            self.step[lo:hi], self.flops[lo:hi], self.nbytes[lo:hi],
+            self.tokens[lo:hi], self.group_id[lo:hi],
+            self.names, self.groups, extra)
+
+    def is_step_sorted(self) -> bool:
+        """True if the step column is non-decreasing — then ``step_index``
+        bounds are direct row offsets and per-step slices are contiguous
+        (``slice_rows``), no permutation needed."""
+        return len(self) < 2 or bool(np.all(self.step[:-1] <= self.step[1:]))
+
     # ------------------------------------------------------------------ #
     # conversion: TraceEvent lists
     # ------------------------------------------------------------------ #

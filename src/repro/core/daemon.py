@@ -49,6 +49,11 @@ class DaemonConfig:
     buffer_capacity: int = 200_000
     reconstruct: bool = True
     enabled: bool = True
+    # detector set for the engine diagnosing this daemon's job when it is
+    # attached to a fleet without an explicit EngineConfig (registry names
+    # / DetectorSpecs — see repro.core.detectors); None = default set
+    detectors: Optional[list] = None
+    num_ranks: int = 1             # job-wide rank count for that engine
 
 
 class TracingDaemon:
@@ -115,13 +120,30 @@ class TracingDaemon:
         every job's daemons without tracking which already exited."""
         self.detach()
 
-    def attach_fleet(self, mux, job_id: Optional[str] = None):
+    def attach_fleet(self, mux, job_id: Optional[str] = None,
+                     engine_cfg=None):
         """Fleet seam: stream this daemon's drains into a
         ``repro.fleet.FleetMultiplexer`` as job ``job_id`` (columnar batch
         sink, no per-event dicts) and hand the daemon to the multiplexer so
-        ``mux.close()`` can ``stop()`` it with the rest of the fleet."""
+        ``mux.close()`` can ``stop()`` it with the rest of the fleet.
+
+        ``engine_cfg`` configures the job's diagnostic engine (detector
+        set, rank count).  Without one, the daemon builds it from its own
+        config — ``DaemonConfig.detectors``/``num_ranks``/``backend`` —
+        so a process can pick its diagnosis plugins at daemon-attach time
+        without ever importing the engine."""
         jid = job_id if job_id is not None else f"job-rank{self.cfg.rank}"
-        mux.register_daemon(jid, self)
+        if engine_cfg is None and (self.cfg.detectors is not None
+                                   or self.cfg.num_ranks > 1
+                                   or self.cfg.backend != DaemonConfig.backend):
+            # any non-default engine-relevant daemon setting wins over the
+            # multiplexer's fallback EngineConfig; an all-default daemon
+            # keeps the historical behavior (fleet-configured backend)
+            from repro.core.engine import EngineConfig
+            engine_cfg = EngineConfig(
+                backend=self.cfg.backend, num_ranks=self.cfg.num_ranks,
+                detectors=self.cfg.detectors)
+        mux.register_daemon(jid, self, engine_cfg)
         self.add_batch_sink(lambda batch, _jid=jid: mux.ingest(_jid, batch))
         return self
 

@@ -10,6 +10,15 @@ Pipeline (paper Fig 2):
      vs the healthy historical profile -> ALGORITHM or INFRASTRUCTURE team.
   ③ anything unresolved escalates to cross-team review.
 
+Detection is PLUGGABLE (``repro.core.detectors``): ``EngineConfig.
+detectors`` names the per-job detector set, resolved through the registry
+into fresh stateful instances bound to this job's ``DetectorContext``.
+The paper's checks are themselves registered plugins; the default set
+(``DEFAULT_DETECTORS``) reproduces the historical engine byte for byte.
+The engine's job is only to aggregate metrics and drive the lifecycle:
+``observe_step`` per closed step in ascending order, ``on_hang`` when a
+majority of daemons report, ``finalize`` at end of stream.
+
 Storage: events live in a step-partitioned columnar ``EventBatch`` — the
 engine never keeps per-rank Python lists.  Producers may feed it TraceEvent
 lists (the daemon sink), the legacy rank -> events dict, or EventBatches
@@ -25,45 +34,19 @@ Conservative policy (paper §8.2): the engine *reports*; it never kills jobs.
 """
 from __future__ import annotations
 
-import enum
 from dataclasses import dataclass, field
 from typing import Optional
 
 import numpy as np
 
-from repro.core import failslow as fs
-from repro.core import regression as rg
+from repro.core.anomaly import Anomaly, Team  # noqa: F401  (re-export)
 from repro.core.columnar import KIND_TO_CODE, EventBatch
+from repro.core.detectors import DetectorContext, resolve_detectors
 from repro.core.events import EventKind, TraceEvent
-from repro.core.hang import HangDiagnosis, diagnose_hang
 from repro.core.history import HealthyProfile, HistoryStore
 from repro.core.metrics import StepMetrics, aggregate_all, aggregate_slice
 
 _C_HANG = KIND_TO_CODE[EventKind.HANG_SUSPECT]
-
-
-class Team(str, enum.Enum):
-    OPERATIONS = "operations"
-    ALGORITHM = "algorithm"
-    INFRASTRUCTURE = "infrastructure"
-    CROSS_TEAM = "cross-team"
-
-
-@dataclass
-class Anomaly:
-    kind: str            # hang | fail_slow | regression
-    metric: str          # detector that fired
-    team: Team
-    root_cause: str
-    step: int = -1
-    severity: float = 1.0
-    ranks: list = field(default_factory=list)
-    evidence: dict = field(default_factory=dict)
-
-    def __str__(self):
-        return (f"[{self.kind}/{self.metric}] -> {self.team.value}: "
-                f"{self.root_cause} (step {self.step}, "
-                f"severity {self.severity:.2f})")
 
 
 @dataclass
@@ -74,16 +57,11 @@ class EngineConfig:
     failslow_window: int = 8
     failslow_drop: float = 0.12
     regression_consecutive: int = 2   # steps a micro signal must persist
-
-
-def _also_low_at_start(finding, baseline: StepMetrics,
-                       prof) -> bool:
-    name = finding.evidence.get("kernel", "")
-    base = baseline.bandwidth.get(name)
-    exp = prof.expected_bandwidth.get(name)
-    if base is None or not exp:
-        return True
-    return base < rg.BW_REGRESSION_FRAC * exp
+    # per-job detector set: registry names, DetectorSpecs, classes, or
+    # instances (see repro.core.detectors).  None = DEFAULT_DETECTORS —
+    # the paper's five checks + hang analysis, byte-equivalent to the
+    # pre-registry engine.
+    detectors: Optional[list] = None
 
 
 class DiagnosticEngine:
@@ -96,11 +74,21 @@ class DiagnosticEngine:
         self._metrics_cache: Optional[dict[int, StepMetrics]] = None
         self.metrics: dict[int, StepMetrics] = {}
         self.anomalies: list[Anomaly] = []
-        self.baseline_metrics: Optional[StepMetrics] = None
-        self._tp_monitor = fs.ThroughputMonitor(
-            config.failslow_window, config.failslow_drop)
-        self._pending_regressions: dict[str, int] = {}
         self._evaluated: set[int] = set()   # steps seen by the incremental path
+        self._finalized = False
+        self.ctx = DetectorContext(config=config, history=self.history)
+        self.detectors = resolve_detectors(config.detectors)
+        for d in self.detectors:
+            d.bind(self.ctx)
+
+    @property
+    def baseline_metrics(self) -> Optional[StepMetrics]:
+        """Metrics of the first evaluated step (shared with detectors)."""
+        return self.ctx.baseline
+
+    @baseline_metrics.setter
+    def baseline_metrics(self, m: Optional[StepMetrics]):
+        self.ctx.baseline = m
 
     # ------------------------------------------------------------------ #
     # ingest — all producers land in the columnar store
@@ -150,7 +138,7 @@ class DiagnosticEngine:
         return self.history.get(self.cfg.backend, self.cfg.num_ranks)
 
     # ------------------------------------------------------------------ #
-    # per-step evaluation
+    # per-step evaluation: drive the detector plugins
     # ------------------------------------------------------------------ #
     def evaluate_step(self, step: int) -> list[Anomaly]:
         m = self._all_metrics().get(step)
@@ -160,82 +148,11 @@ class DiagnosticEngine:
 
     def _evaluate_metrics(self, m: StepMetrics, step: int) -> list[Anomaly]:
         self.metrics[step] = m
-        if self.baseline_metrics is None:
-            self.baseline_metrics = m
+        if self.ctx.baseline is None:
+            self.ctx.baseline = m
         found: list[Anomaly] = []
-
-        # ---- fail-slow (macro ①, then micro attribution) -------------- #
-        drop = self._tp_monitor.observe(m.throughput)
-        if drop is not None:
-            f = fs.attribute_failslow(m, self.baseline_metrics, step, drop)
-            found.append(Anomaly(
-                kind="fail_slow", metric="throughput", team=Team.OPERATIONS,
-                root_cause={"gpu_underclock":
-                            f"GPU underclocking on ranks {f.ranks}",
-                            "network":
-                            "network degradation (jitter/congestion); "
-                            "binary-search probe plan attached",
-                            "unknown": "sudden slowdown, cause unresolved"
-                            }[f.cause],
-                step=step, severity=1.0 + drop, ranks=f.ranks,
-                evidence={"drop_frac": drop, **f.evidence,
-                          "probe_plan": f.probe_plan}))
-
-        # ---- mid-job bandwidth drop => fail-slow (network), not a
-        # regression: the paper's taxonomy keys on SUDDEN vs PERSISTENT ---- #
-        base_bw = self.baseline_metrics.bandwidth
-        slow_groups = [(n, bw / base_bw[n]) for n, bw in m.bandwidth.items()
-                       if n in base_bw and base_bw[n] > 0
-                       and bw < 0.75 * base_bw[n]]
-        if slow_groups and m is not self.baseline_metrics:
-            found.append(Anomaly(
-                kind="fail_slow", metric="bandwidth", team=Team.OPERATIONS,
-                root_cause="network degradation on "
-                           f"{len(slow_groups)} collective group(s) "
-                           "(jitter/CRC/congestion); probe plan attached",
-                step=step, severity=1.0 / min(f for _, f in slow_groups),
-                evidence={"slow_groups": slow_groups[:6],
-                          "probe_plan": fs.binary_search_plan(m.num_ranks)}))
-
-        # ---- regressions (micro ②-⑤ vs healthy history) --------------- #
-        prof = self.profile
-        if prof is not None:
-            findings: list[rg.RegressionFinding] = []
-            il = rg.check_issue_latency(m, prof)
-            if il:
-                findings.append(il)
-            findings.extend(rg.check_voids(m, prof))
-            flops_f = rg.check_flops(m, prof)
-            rg.annotate_layout(flops_f, self.cfg.kernel_shapes)
-            findings.extend(flops_f)
-            # bandwidth regression must be low from the job's FIRST step
-            # (persistent config/software issue, e.g. GDR module down)
-            bw_f = rg.check_bandwidth(m, prof)
-            bw_f = [f for f in bw_f
-                    if _also_low_at_start(f, self.baseline_metrics, prof)]
-            findings.extend(bw_f)
-            # prefer the specific detector: if v_inter fired and the issue-
-            # latency culprit is the dataloader, drop the duplicate finding
-            if any(f.metric == "v_inter" for f in findings):
-                findings = [f for f in findings
-                            if not (f.metric == "issue_latency"
-                                    and "dataloader" in f.root_cause.lower())]
-            for f in findings:
-                key = f.metric
-                self._pending_regressions[key] = \
-                    self._pending_regressions.get(key, 0) + 1
-                if self._pending_regressions[key] >= \
-                        self.cfg.regression_consecutive:
-                    found.append(Anomaly(
-                        kind="regression", metric=f.metric,
-                        team=Team(f.suggested_team),
-                        root_cause=f.root_cause, step=step,
-                        severity=f.severity, evidence=f.evidence))
-            fired = {f.metric for f in findings}
-            for key in list(self._pending_regressions):
-                if key not in fired:
-                    self._pending_regressions[key] = 0
-
+        for d in self.detectors:
+            found.extend(d.observe_step(m, step))
         self.anomalies.extend(found)
         return found
 
@@ -246,7 +163,21 @@ class DiagnosticEngine:
         for step in sorted(ms):
             out.extend(self._evaluate_metrics(ms[step], step))
         out.extend(self.check_hangs())
+        out.extend(self.finalize_detectors())
         return out
+
+    def finalize_detectors(self) -> list[Anomaly]:
+        """End-of-stream hook: every detector's ``finalize()``, once.
+        The built-ins return nothing here; stateful third-party detectors
+        (e.g. trend accumulators) flush their tail findings."""
+        if self._finalized:
+            return []
+        self._finalized = True
+        found: list[Anomaly] = []
+        for d in self.detectors:
+            found.extend(d.finalize())
+        self.anomalies.extend(found)
+        return found
 
     # ------------------------------------------------------------------ #
     # incremental evaluation (the fleet path)
@@ -312,20 +243,25 @@ class DiagnosticEngine:
             suspects[int(b.rank[row])] = stack
         if len(suspects) < max(b.num_distinct_ranks() // 2, 1):
             return []
-        return [self.diagnose_hang(suspects, ring_progress)]
+        return self.on_hang(suspects, ring_progress)
+
+    def on_hang(self, stacks: dict, ring_progress=None) -> list[Anomaly]:
+        """Fan a majority-hang report out to every detector's ``on_hang``;
+        with the default set, exactly the hang-analysis plugin answers."""
+        found: list[Anomaly] = []
+        for d in self.detectors:
+            a = d.on_hang(stacks, ring_progress)
+            if a is not None:
+                found.append(a)
+        self.anomalies.extend(found)
+        return found
 
     def diagnose_hang(self, stacks: dict,
-                      ring_progress=None) -> Anomaly:
-        d: HangDiagnosis = diagnose_hang(stacks, ring_progress)
-        a = Anomaly(
-            kind="hang",
-            metric="intra_kernel_inspecting" if d.used_inspector
-            else "call_stack_analysis",
-            team=Team.OPERATIONS,
-            root_cause=d.detail, ranks=d.faulty_ranks,
-            evidence={"hang_kind": d.kind, "link": d.link})
-        self.anomalies.append(a)
-        return a
+                      ring_progress=None) -> Optional[Anomaly]:
+        """Back-compat single-anomaly hang entry point: first detector
+        answer (``None`` only if the configured set has no hang handler)."""
+        found = self.on_hang(stacks, ring_progress)
+        return found[0] if found else None
 
     # ------------------------------------------------------------------ #
     # profile learning helper

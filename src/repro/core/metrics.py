@@ -229,7 +229,7 @@ def aggregate_slice(batch: EventBatch, step: int,
         return None
     if num_ranks is None:
         num_ranks = batch.num_distinct_ranks()
-    return _aggregate_rows(batch, np.arange(len(batch)), step, int(num_ranks))
+    return _aggregate_rows(batch, None, step, int(num_ranks))
 
 
 def _group_bounds(keys: np.ndarray):
@@ -248,18 +248,26 @@ def _appearance_order(o: np.ndarray, bounds: np.ndarray) -> list[int]:
     return np.argsort(o[bounds[:-1]], kind="stable").tolist()
 
 
-def _aggregate_rows(b: EventBatch, rows: np.ndarray, step: int,
+def _aggregate_rows(b: EventBatch, rows: Optional[np.ndarray], step: int,
                     num_ranks: int) -> StepMetrics:
     names = b.names
-    k = b.kind[rows]
-    rk = b.rank[rows]
-    iss = b.issue_ts[rows]
-    st = b.start_ts[rows]
-    en = b.end_ts[rows]
-    nid = b.name_id[rows]
-    fl = b.flops[rows]
-    nb = b.nbytes[rows]
-    tk = b.tokens[rows]
+    if rows is None:
+        # whole-batch fast path (``aggregate_slice``): reference the
+        # columns directly — a fancy-index with arange would copy every
+        # column of every step slice on the fleet hot path
+        k, rk, iss, st, en = b.kind, b.rank, b.issue_ts, b.start_ts, b.end_ts
+        nid, fl, nb, tk = b.name_id, b.flops, b.nbytes, b.tokens
+        rows = np.arange(len(b))       # only sparse lookups index this
+    else:
+        k = b.kind[rows]
+        rk = b.rank[rows]
+        iss = b.issue_ts[rows]
+        st = b.start_ts[rows]
+        en = b.end_ts[rows]
+        nid = b.name_id[rows]
+        fl = b.flops[rows]
+        nb = b.nbytes[rows]
+        tk = b.tokens[rows]
 
     # ---- step span & throughput (①) ---------------------------------- #
     ms = k == _C_STEP

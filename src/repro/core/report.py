@@ -9,6 +9,8 @@ from __future__ import annotations
 import json
 from typing import Iterable
 
+import numpy as np
+
 from repro.core.engine import Anomaly
 from repro.core.events import DEVICE_KINDS, EventKind, TraceEvent
 
@@ -33,12 +35,27 @@ def anomaly_report(anomalies: Iterable[Anomaly]) -> str:
     return "\n".join(lines)
 
 
+def _json_coerce(o):
+    """Fallback serializer for detector evidence: vectorized detectors
+    attach numpy scalars/arrays (np.float64 severities, outlier-rank
+    arrays), and custom plugins attach whatever they like — dashboards
+    still need valid JSON, so coerce instead of raising."""
+    if isinstance(o, np.generic):
+        return o.item()
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    if isinstance(o, (set, frozenset)):
+        return sorted(o, key=repr)
+    return str(o)
+
+
 def anomalies_json(anomalies: Iterable[Anomaly]) -> str:
     return json.dumps([{
         "kind": a.kind, "metric": a.metric, "team": a.team.value,
-        "root_cause": a.root_cause, "step": a.step,
-        "severity": a.severity, "ranks": list(a.ranks),
-    } for a in anomalies], indent=1)
+        "root_cause": a.root_cause, "step": int(a.step),
+        "severity": float(a.severity), "ranks": list(a.ranks),
+        "evidence": a.evidence,
+    } for a in anomalies], indent=1, default=_json_coerce)
 
 
 def ascii_timeline(events: list[TraceEvent], rank: int, step: int,

@@ -14,7 +14,18 @@ Quickstart::
 
 Live daemons plug in via ``daemon.attach_fleet(mux, "job-a")``; recorded
 logs via ``FleetReplayer(mux).replay_dir("logs/")``.
+
+Cross-job diagnosis plugs in through the fleet-scope detector tier::
+
+    mux = FleetMultiplexer(FleetConfig(
+        fleet_detectors=["cross_job_failslow"]), history=store)
+    mux.set_topology("job-a", rack="r12", switch="sw3")
+
+(see ``repro.core.detectors`` — co-occurring fail-slows on a shared
+rack/switch are reclassified as INFRASTRUCTURE, ``origin="fleet"``).
 """
+from repro.core.detectors.fleet import (CrossJobFailSlowCorrelator,  # noqa: F401
+                                        FleetContext, FleetDetector)
 from repro.fleet.multiplexer import (FleetConfig, FleetJob,  # noqa: F401
                                      FleetMultiplexer)
 from repro.fleet.replay import FleetReplayer, ReplayStats  # noqa: F401
@@ -28,4 +39,5 @@ __all__ = [
     "FleetReplayer", "ReplayStats",
     "SharedInterner", "StepPartitionedStore",
     "AnomalyStream", "FleetAnomaly", "DEFAULT_ROUTES",
+    "FleetDetector", "FleetContext", "CrossJobFailSlowCorrelator",
 ]

@@ -18,6 +18,13 @@ streams and diagnosing them *online*.  This module is that layer:
     diagnosed immediately (a hung job stops producing events — waiting for
     a watermark that will never advance would mask exactly the anomaly the
     daemons are screaming about);
+  * a second, FLEET-SCOPE detector tier (``FleetConfig.fleet_detectors``,
+    resolved through the same registry at scope ``"fleet"``) observes
+    every closed step's anomalies together with the job -> rack/switch
+    topology (``set_topology``) — e.g. ``CrossJobFailSlowCorrelator``
+    reclassifies co-occurring fail-slows on shared hardware as
+    INFRASTRUCTURE.  Its emissions land on the same stream tagged
+    ``origin="fleet"``;
   * everything lands in one merged, timestamp-ordered, team-routed
     :class:`~repro.fleet.stream.AnomalyStream` tagged with job ids.
 
@@ -25,9 +32,9 @@ Feed it from live ``TracingDaemon``s (``daemon.attach_fleet(mux, job)``),
 from simulators (``mux.ingest(job, batch)``), or from recorded JSONL logs
 (``fleet.replay``).  Ingest is thread-safe and parallel across jobs:
 each job has its own lock (a global lock guards only the job registry;
-the shared interner and the anomaly stream lock internally), so daemon
-background threads feeding different jobs never serialize each other's
-diagnosis.
+the shared interner, the anomaly stream, and the fleet-detector tier lock
+internally), so daemon background threads feeding different jobs never
+serialize each other's diagnosis.
 """
 from __future__ import annotations
 
@@ -36,6 +43,8 @@ from dataclasses import dataclass, field
 from typing import Optional
 
 from repro.core.columnar import EventBatch
+from repro.core.detectors.fleet import FleetContext
+from repro.core.detectors.registry import resolve_detectors
 from repro.core.engine import DiagnosticEngine, EngineConfig, Team
 from repro.core.history import HistoryStore
 from repro.fleet.store import SharedInterner, StepPartitionedStore
@@ -47,6 +56,11 @@ class FleetConfig:
     watermark_delay: int = 1    # steps behind max-seen before a step closes
     backend: str = "dense-train"
     routes: Optional[dict[Team, str]] = None
+    # fleet-scope detector tier: registry names (scope "fleet"),
+    # DetectorSpecs, classes, or instances.  Default: none.
+    fleet_detectors: Optional[list] = None
+    # job_id -> {"rack": ..., "switch": ...}; extend live via set_topology
+    topology: Optional[dict[str, dict]] = None
 
 
 @dataclass
@@ -63,6 +77,14 @@ class FleetJob:
     # threads diagnose different jobs in parallel instead of serializing
     # the whole fleet behind one lock
     lock: threading.Lock = field(default_factory=threading.Lock)
+    # leaf lock for anomaly_count only: the fleet tier credits a VICTIM
+    # job from another job's ingest thread, which must not acquire the
+    # victim's work lock (lock-order inversion with its own _observe_fleet)
+    counter_lock: threading.Lock = field(default_factory=threading.Lock)
+
+    def count_anomaly(self, n: int = 1) -> None:
+        with self.counter_lock:
+            self.anomaly_count += n
 
     @property
     def evaluated(self) -> set:
@@ -78,9 +100,20 @@ class FleetMultiplexer:
         self.history = history or HistoryStore()
         self.interner = SharedInterner()
         self.stream = AnomalyStream(self.cfg.routes)
+        # deep-copy the inner attr dicts: set_topology mutates them, and a
+        # FleetConfig reused across multiplexers must stay pristine
+        self.topology: dict[str, dict] = {
+            k: dict(v) for k, v in (self.cfg.topology or {}).items()}
+        self.fleet_detectors = resolve_detectors(
+            self.cfg.fleet_detectors, scope="fleet")
+        self._fleet_ctx = FleetContext(topology=self.topology,
+                                       config=self.cfg)
+        for fd in self.fleet_detectors:
+            fd.bind(self._fleet_ctx)
         self._jobs: dict[str, FleetJob] = {}
         self._lock = threading.RLock()    # job REGISTRY only; work is
         #                                   guarded by each job's own lock
+        self._fleet_det_lock = threading.Lock()   # cross-job tier state
 
     # ------------------------------------------------------------------ #
     # job registry
@@ -110,8 +143,16 @@ class FleetMultiplexer:
         with self._lock:
             return list(self._jobs.values())
 
-    def register_daemon(self, job_id: str, daemon) -> FleetJob:
-        job = self.add_job(job_id)
+    def set_topology(self, job_id: str, **attrs) -> None:
+        """Annotate a job with placement metadata for the fleet-scope
+        detector tier (e.g. ``set_topology("job-a", rack="r12",
+        switch="sw3")``).  Merges into any attrs set earlier."""
+        with self._fleet_det_lock:
+            self.topology.setdefault(job_id, {}).update(attrs)
+
+    def register_daemon(self, job_id: str, daemon,
+                        engine_cfg: Optional[EngineConfig] = None) -> FleetJob:
+        job = self.add_job(job_id, engine_cfg)
         job.daemon = daemon
         return job
 
@@ -166,7 +207,26 @@ class FleetMultiplexer:
             ts = float(sb.end_ts.max()) if len(sb) else job.store.last_ts
             for a in anoms:
                 self.stream.push(job.job_id, a, ts)
-                job.anomaly_count += 1
+                job.count_anomaly()
+            self._observe_fleet(job.job_id, s, anoms, ts)
+
+    def _observe_fleet(self, job_id: str, step: int, anoms: list,
+                       ts: float) -> None:
+        """Feed one closed step's anomalies to the fleet-scope tier and
+        push whatever it emits (tagged ``origin="fleet"``)."""
+        if not self.fleet_detectors or not anoms:
+            return
+        # one lock for the whole tier: fleet detectors correlate ACROSS
+        # jobs, so unlike the per-job engines their state is shared by
+        # every ingest thread
+        with self._fleet_det_lock:
+            for fd in self.fleet_detectors:
+                for jid, a in fd.observe_step(job_id, step, anoms, ts):
+                    self.stream.push(jid, a, ts, origin="fleet")
+                    with self._lock:
+                        j = self._jobs.get(jid)
+                    if j is not None:
+                        j.count_anomaly()
 
     def _maybe_hang(self, job: FleetJob) -> None:
         stacks = job.store.hang_stacks
@@ -177,9 +237,11 @@ class FleetMultiplexer:
         # a hung job's stream stops: flush pending steps (matching the
         # terminal evaluate_all order), then diagnose from the stacks.
         self._advance(job, flush=True)
-        a = job.engine.diagnose_hang(dict(stacks), None)
-        self.stream.push(job.job_id, a, job.store.last_ts)
-        job.anomaly_count += 1
+        anoms = job.engine.on_hang(dict(stacks), None)
+        for a in anoms:
+            self.stream.push(job.job_id, a, job.store.last_ts)
+            job.count_anomaly()
+        self._observe_fleet(job.job_id, -1, anoms, job.store.last_ts)
         job.hang_reported = True
 
     # ------------------------------------------------------------------ #
@@ -200,9 +262,27 @@ class FleetMultiplexer:
                 self._maybe_hang(job)
 
     def finalize(self, job_id: Optional[str] = None) -> list[FleetAnomaly]:
-        """``flush`` + drain: returns the merged remaining stream."""
+        """``flush`` + end-of-stream detector finalize + drain: returns
+        the merged remaining stream."""
         self.flush(job_id)
+        targets = [self.job(job_id)] if job_id is not None else self.jobs
+        for job in targets:
+            with job.lock:
+                for a in job.engine.finalize_detectors():
+                    self.stream.push(job.job_id, a, job.store.last_ts)
+                    job.count_anomaly()
+        if job_id is None:
+            with self._fleet_det_lock:
+                for fd in self.fleet_detectors:
+                    for jid, a in fd.finalize():
+                        self.stream.push(jid, a, self.stream_last_ts(jid),
+                                         origin="fleet")
         return self.stream.drain()
+
+    def stream_last_ts(self, job_id: str) -> float:
+        with self._lock:
+            j = self._jobs.get(job_id)
+        return j.store.last_ts if j is not None else 0.0
 
     def close(self) -> list[FleetAnomaly]:
         """Stop every job's attached daemon (idempotent ``stop()``), then

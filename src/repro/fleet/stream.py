@@ -32,13 +32,15 @@ class FleetAnomaly:
     seq: int                 # fleet-wide arrival order (total tie-break)
     anomaly: Anomaly
     route: str
+    origin: str = "job"      # "job" (per-job engine) | "fleet" (cross-job tier)
 
     @property
     def team(self) -> Team:
         return self.anomaly.team
 
     def __str__(self):
-        return f"[{self.ts:10.3f}s] {self.job_id} -> {self.route}: " \
+        tag = "" if self.origin == "job" else f" ({self.origin})"
+        return f"[{self.ts:10.3f}s] {self.job_id}{tag} -> {self.route}: " \
                f"{self.anomaly}"
 
 
@@ -54,12 +56,14 @@ class AnomalyStream:
         self._lock = threading.Lock()
         self.total = 0
 
-    def push(self, job_id: str, anomaly: Anomaly, ts: float) -> FleetAnomaly:
+    def push(self, job_id: str, anomaly: Anomaly, ts: float,
+             origin: str = "job") -> FleetAnomaly:
         with self._lock:
             fa = FleetAnomaly(
                 job_id=job_id, ts=float(ts), seq=self.total, anomaly=anomaly,
                 route=self.routes.get(anomaly.team,
-                                      DEFAULT_ROUTES[Team.CROSS_TEAM]))
+                                      DEFAULT_ROUTES[Team.CROSS_TEAM]),
+                origin=origin)
             self._pending.append(fa)
             self.total += 1
             return fa

@@ -1,0 +1,471 @@
+"""Detector-registry redesign tests (ISSUE 4).
+
+Covered:
+  * registry errors: unknown name (with the known-name list), duplicate
+    registration, scope mismatch, replace=True override;
+  * DetectorSpec options reach the detector constructor;
+  * custom third-party detector end-to-end: registered, resolved by name
+    in EngineConfig, fires alongside the built-ins, finalize() flushes
+    through ``evaluate_all`` AND through the fleet multiplexer;
+  * default-set byte-equivalence vs a frozen port of the pre-registry
+    engine if-chain, on traces recorded to FCS and read back;
+  * fleet-scope tier: ``CrossJobFailSlowCorrelator`` reclassifies
+    co-occurring fail-slows on a shared rack as INFRASTRUCTURE
+    (origin="fleet"), leaving unrelated jobs untouched;
+  * daemon config plumb-through: ``DaemonConfig.detectors`` picks the
+    job's detector set at ``attach_fleet`` time;
+  * ``anomalies_json`` coerces numpy scalars/arrays in evidence;
+  * ``EventBatch.slice_rows`` view slices equal ``take`` copies, and FCS
+    directory replay (the zero-copy path) matches the direct oracle.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import failslow as fs
+from repro.core import regression as rg
+from repro.core.anomaly import Anomaly, Team
+from repro.core.columnar import KIND_TO_CODE, EventBatch
+from repro.core.daemon import DaemonConfig, TracingDaemon
+from repro.core.detectors import (DEFAULT_DETECTORS, Detector, DetectorError,
+                                  DetectorSpec, DuplicateDetectorError,
+                                  UnknownDetectorError, register_detector,
+                                  unregister_detector)
+from repro.core.engine import DiagnosticEngine, EngineConfig
+from repro.core.events import EventKind
+from repro.core.hang import diagnose_hang
+from repro.core.history import HistoryStore
+from repro.core.metrics import aggregate_all
+from repro.core.report import anomalies_json
+from repro.core.timeline import (ClusterSimulator, Injection,
+                                 program_from_config)
+from repro.fleet import (FleetConfig, FleetMultiplexer, FleetReplayer)
+from repro import store as trace_store
+
+N = 32
+
+SCENARIOS = {
+    "healthy": [],
+    "gc": [Injection(kind="gc", duration=0.02, period_ops=5)],
+    "underclock": [Injection(kind="underclock", ranks=(5,), factor=2.5,
+                             start_step=3)],
+    "jitter": [Injection(kind="network_jitter", factor=3.0, start_step=3)],
+    "hang": [Injection(kind="hang", ranks=(7,), at_step=2)],
+}
+
+
+@pytest.fixture(scope="module")
+def world():
+    cfg = get_config("llama-20b-paper")
+    prog = program_from_config(cfg, num_chips=N)
+    store = HistoryStore()
+    eng0 = DiagnosticEngine(
+        EngineConfig(backend="dense-train", num_ranks=N), store)
+    for seed in range(3):
+        eng0.ingest_batch(ClusterSimulator(N, prog, seed=seed).run_batch(4))
+    eng0.learn_healthy()
+    return prog, store
+
+
+def _sig(a):
+    return (str(a), json.dumps(a.evidence, sort_keys=True, default=str))
+
+
+def _step_chunks(batch):
+    order, uniq, bounds = batch.step_index()
+    return [batch.take(order[bounds[i]:bounds[i + 1]])
+            for i in range(uniq.size)]
+
+
+# --------------------------------------------------------------------- #
+# registry semantics
+# --------------------------------------------------------------------- #
+def test_unknown_detector_name_raises():
+    with pytest.raises(UnknownDetectorError, match="no_such_detector"):
+        DiagnosticEngine(EngineConfig(detectors=["failslow",
+                                                 "no_such_detector"]))
+    # the error lists what IS registered, so typos are self-diagnosing
+    with pytest.raises(UnknownDetectorError, match="failslow"):
+        DiagnosticEngine(EngineConfig(detectors=["no_such_detector"]))
+
+
+def test_duplicate_registration_raises():
+    @register_detector
+    class _Dup(Detector):
+        name = "dup_test_detector"
+        kind = "regression"
+    try:
+        with pytest.raises(DuplicateDetectorError, match="dup_test_detector"):
+            register_detector(type("_Dup2", (Detector,),
+                                   {"name": "dup_test_detector"}))
+
+        # replace=True is the sanctioned override
+        @register_detector(replace=True)
+        class _Dup3(Detector):
+            name = "dup_test_detector"
+            kind = "regression"
+        eng = DiagnosticEngine(EngineConfig(detectors=["dup_test_detector"]))
+        assert type(eng.detectors[0]).__name__ == "_Dup3"
+    finally:
+        unregister_detector("dup_test_detector")
+
+
+def test_scope_mismatch_rejected():
+    # a fleet-scope name cannot be resolved into the per-job engine set
+    with pytest.raises(DetectorError):
+        DiagnosticEngine(EngineConfig(detectors=["cross_job_failslow"]))
+
+
+def test_detector_spec_options_reach_constructor(world):
+    prog, store = world
+    eng = DiagnosticEngine(EngineConfig(
+        backend="dense-train", num_ranks=N,
+        detectors=[DetectorSpec("failslow", {"window": 4, "drop": 0.5})]),
+        store)
+    d = eng.detectors[0]
+    assert d._monitor.window == 4 and d._monitor.drop_threshold == 0.5
+
+
+# --------------------------------------------------------------------- #
+# custom third-party detector, end-to-end
+# --------------------------------------------------------------------- #
+def _make_custom():
+    @register_detector
+    class ThroughputFloorDetector(Detector):
+        """Fires when throughput dips below an absolute floor; emits one
+        summary finding from finalize()."""
+        name = "throughput_floor"
+        kind = "regression"
+
+        def __init__(self, floor: float = 0.0):
+            self.floor = floor
+            self.low_steps = []
+
+        def observe_step(self, m, step):
+            if m.throughput < self.floor:
+                self.low_steps.append(step)
+                return [Anomaly(
+                    kind="regression", metric="throughput_floor",
+                    team=Team.CROSS_TEAM,
+                    root_cause=f"throughput below floor {self.floor:g}",
+                    step=step,
+                    evidence={"throughput": np.float64(m.throughput)})]
+            return []
+
+        def finalize(self):
+            if not self.low_steps:
+                return []
+            return [Anomaly(
+                kind="regression", metric="throughput_floor_summary",
+                team=Team.CROSS_TEAM,
+                root_cause=f"{len(self.low_steps)} step(s) below floor",
+                step=self.low_steps[-1],
+                evidence={"steps": list(self.low_steps)})]
+    return ThroughputFloorDetector
+
+
+def test_custom_detector_end_to_end(world):
+    prog, store = world
+    _make_custom()
+    try:
+        spec = [*DEFAULT_DETECTORS,
+                DetectorSpec("throughput_floor", {"floor": 1e18})]
+        batch = ClusterSimulator(N, prog, seed=7,
+                                 injections=SCENARIOS["gc"]).run_batch(5)
+
+        # default built-ins still fire identically next to the plugin
+        base = DiagnosticEngine(
+            EngineConfig(backend="dense-train", num_ranks=N), store)
+        base.ingest_batch(batch)
+        base_sigs = [_sig(a) for a in base.evaluate_all()]
+
+        eng = DiagnosticEngine(EngineConfig(
+            backend="dense-train", num_ranks=N, detectors=spec), store)
+        eng.ingest_batch(batch)
+        out = eng.evaluate_all()
+        custom = [a for a in out if a.metric.startswith("throughput_floor")]
+        rest = [_sig(a) for a in out
+                if not a.metric.startswith("throughput_floor")]
+        assert rest == base_sigs
+        # fired every step (absurd floor), plus the finalize summary
+        assert [a.step for a in custom
+                if a.metric == "throughput_floor"] == [0, 1, 2, 3, 4]
+        assert custom[-1].metric == "throughput_floor_summary"
+
+        # same plugin streams through the fleet: finalize() lands on the
+        # merged stream with team routing
+        mux = FleetMultiplexer(FleetConfig(watermark_delay=1), history=store)
+        mux.add_job("j", EngineConfig(backend="dense-train", num_ranks=N,
+                                      detectors=spec))
+        for c in _step_chunks(batch):
+            mux.ingest("j", c)
+        fleet_sigs = [_sig(fa.anomaly) for fa in mux.poll() + mux.finalize()]
+        assert fleet_sigs == [_sig(a) for a in out]
+    finally:
+        unregister_detector("throughput_floor")
+
+
+# --------------------------------------------------------------------- #
+# default set == frozen pre-registry engine, on recorded traces
+# --------------------------------------------------------------------- #
+def _legacy_evaluate_all(cfg: EngineConfig, history: HistoryStore,
+                         batch: EventBatch) -> list:
+    """Frozen port of the PR-3 DiagnosticEngine if-chain (the pre-registry
+    behavior oracle).  Do not refactor against src/ — drift from this
+    verbatim copy is exactly what the test exists to catch."""
+    tp = fs.ThroughputMonitor(cfg.failslow_window, cfg.failslow_drop)
+    pending: dict[str, int] = {}
+    baseline = None
+    prof = history.get(cfg.backend, cfg.num_ranks)
+    out = []
+
+    def also_low_at_start(finding, base_m):
+        name = finding.evidence.get("kernel", "")
+        base = base_m.bandwidth.get(name)
+        exp = prof.expected_bandwidth.get(name)
+        if base is None or not exp:
+            return True
+        return base < rg.BW_REGRESSION_FRAC * exp
+
+    ms_all = aggregate_all(batch)
+    for step in sorted(ms_all):
+        m = ms_all[step]
+        if baseline is None:
+            baseline = m
+        drop = tp.observe(m.throughput)
+        if drop is not None:
+            f = fs.attribute_failslow(m, baseline, step, drop)
+            out.append(Anomaly(
+                kind="fail_slow", metric="throughput", team=Team.OPERATIONS,
+                root_cause={"gpu_underclock":
+                            f"GPU underclocking on ranks {f.ranks}",
+                            "network":
+                            "network degradation (jitter/congestion); "
+                            "binary-search probe plan attached",
+                            "unknown": "sudden slowdown, cause unresolved"
+                            }[f.cause],
+                step=step, severity=1.0 + drop, ranks=f.ranks,
+                evidence={"drop_frac": drop, **f.evidence,
+                          "probe_plan": f.probe_plan}))
+        base_bw = baseline.bandwidth
+        slow_groups = [(n, bw / base_bw[n]) for n, bw in m.bandwidth.items()
+                       if n in base_bw and base_bw[n] > 0
+                       and bw < 0.75 * base_bw[n]]
+        if slow_groups and m is not baseline:
+            out.append(Anomaly(
+                kind="fail_slow", metric="bandwidth", team=Team.OPERATIONS,
+                root_cause="network degradation on "
+                           f"{len(slow_groups)} collective group(s) "
+                           "(jitter/CRC/congestion); probe plan attached",
+                step=step, severity=1.0 / min(f for _, f in slow_groups),
+                evidence={"slow_groups": slow_groups[:6],
+                          "probe_plan": fs.binary_search_plan(m.num_ranks)}))
+        if prof is not None:
+            findings = []
+            il = rg.check_issue_latency(m, prof)
+            if il:
+                findings.append(il)
+            findings.extend(rg.check_voids(m, prof))
+            flops_f = rg.check_flops(m, prof)
+            rg.annotate_layout(flops_f, cfg.kernel_shapes)
+            findings.extend(flops_f)
+            bw_f = [f for f in rg.check_bandwidth(m, prof)
+                    if also_low_at_start(f, baseline)]
+            findings.extend(bw_f)
+            if any(f.metric == "v_inter" for f in findings):
+                findings = [f for f in findings
+                            if not (f.metric == "issue_latency"
+                                    and "dataloader" in f.root_cause.lower())]
+            for f in findings:
+                pending[f.metric] = pending.get(f.metric, 0) + 1
+                if pending[f.metric] >= cfg.regression_consecutive:
+                    out.append(Anomaly(
+                        kind="regression", metric=f.metric,
+                        team=Team(f.suggested_team),
+                        root_cause=f.root_cause, step=step,
+                        severity=f.severity, evidence=f.evidence))
+            fired = {f.metric for f in findings}
+            for key in list(pending):
+                if key not in fired:
+                    pending[key] = 0
+
+    # hang check (majority of distinct ranks with HANG_SUSPECT rows)
+    c_hang = KIND_TO_CODE[EventKind.HANG_SUSPECT]
+    suspects = {}
+    for row in np.nonzero(batch.kind == c_hang)[0].tolist():
+        stack = (batch.extra.get(row) or {}).get("stack", [])
+        suspects[int(batch.rank[row])] = stack
+    if len(suspects) >= max(batch.num_distinct_ranks() // 2, 1):
+        d = diagnose_hang(suspects, None)
+        out.append(Anomaly(
+            kind="hang",
+            metric="intra_kernel_inspecting" if d.used_inspector
+            else "call_stack_analysis",
+            team=Team.OPERATIONS,
+            root_cause=d.detail, ranks=d.faulty_ranks,
+            evidence={"hang_kind": d.kind, "link": d.link}))
+    return out
+
+
+def test_default_set_matches_legacy_engine_on_recorded_traces(world,
+                                                              tmp_path):
+    prog, store = world
+    cfg = EngineConfig(backend="dense-train", num_ranks=N)
+    for name, inj in SCENARIOS.items():
+        path = str(tmp_path / f"{name}.fcs")
+        trace_store.write_trace(
+            ClusterSimulator(N, prog, seed=7, injections=inj).run_batch(6),
+            path)
+        recorded = trace_store.read_trace(path)
+        legacy = [_sig(a) for a in _legacy_evaluate_all(cfg, store, recorded)]
+        eng = DiagnosticEngine(
+            EngineConfig(backend="dense-train", num_ranks=N), store)
+        eng.ingest_batch(recorded)
+        assert [_sig(a) for a in eng.evaluate_all()] == legacy, name
+    assert any(len(_legacy_evaluate_all(
+        cfg, store,
+        ClusterSimulator(N, prog, seed=7,
+                         injections=SCENARIOS[k]).run_batch(6))) > 0
+        for k in ("gc", "underclock", "jitter", "hang"))
+
+
+# --------------------------------------------------------------------- #
+# fleet-scope tier: cross-job fail-slow correlation
+# --------------------------------------------------------------------- #
+def test_cross_job_failslow_reclassified_infrastructure(world):
+    """Two jobs on the same rack hit by the same network degradation are
+    reclassified INFRASTRUCTURE by the correlator; the healthy job on
+    another rack stays clean."""
+    prog, store = world
+    mux = FleetMultiplexer(FleetConfig(
+        watermark_delay=1, fleet_detectors=["cross_job_failslow"]),
+        history=store)
+    jobs = {
+        "jobA": SCENARIOS["jitter"],
+        "jobB": SCENARIOS["underclock"],
+        "jobC": [],
+    }
+    mux.set_topology("jobA", rack="rack7", switch="sw-12")
+    mux.set_topology("jobB", rack="rack7", switch="sw-99")
+    mux.set_topology("jobC", rack="rack2", switch="sw-12")
+    pending = {}
+    for job_id, inj in jobs.items():
+        mux.add_job(job_id, EngineConfig(backend="dense-train", num_ranks=N))
+        b = ClusterSimulator(N, prog, seed=7, injections=inj).run_batch(6)
+        pending[job_id] = _step_chunks(b)
+    while any(pending.values()):
+        for job_id, chunks in pending.items():
+            if chunks:
+                mux.ingest(job_id, chunks.pop(0))
+    out = mux.poll() + mux.finalize()
+    fleet = [fa for fa in out if fa.origin == "fleet"]
+    assert fleet, "correlator emitted nothing"
+    assert {fa.job_id for fa in fleet} == {"jobA", "jobB"}
+    for fa in fleet:
+        a = fa.anomaly
+        assert a.team is Team.INFRASTRUCTURE
+        assert a.metric == "cross_job_correlation"
+        assert "rack7" in a.root_cause
+        assert a.evidence["rack"] == "rack7"
+        assert a.evidence["jobs"] == ["jobA", "jobB"]
+        assert fa.route == "oncall-infrastructure"
+    # one reclassification per (rack, job): repeated fail-slow steps do
+    # not spam the stream
+    assert len(fleet) == 2
+    # per-job anomalies are unchanged next to the fleet tier
+    assert all(fa.origin == "job" for fa in out if fa not in fleet)
+    assert not any(fa.job_id == "jobC" for fa in out)
+
+
+def test_correlator_ignores_single_job_and_unmapped_jobs(world):
+    prog, store = world
+    mux = FleetMultiplexer(FleetConfig(
+        watermark_delay=1, fleet_detectors=["cross_job_failslow"]),
+        history=store)
+    mux.set_topology("solo", rack="rack1")
+    # "nomap" never gets topology: fail-slows there cannot correlate
+    for job_id in ("solo", "nomap"):
+        mux.add_job(job_id, EngineConfig(backend="dense-train", num_ranks=N))
+        b = ClusterSimulator(N, prog, seed=7,
+                             injections=SCENARIOS["jitter"]).run_batch(6)
+        for c in _step_chunks(b):
+            mux.ingest(job_id, c)
+    out = mux.poll() + mux.finalize()
+    assert [fa for fa in out if fa.origin == "fleet"] == []
+    assert any(fa.anomaly.kind == "fail_slow" for fa in out)
+
+
+def test_daemon_config_detectors_plumb_through():
+    mux = FleetMultiplexer(FleetConfig(watermark_delay=0))
+    d = TracingDaemon(DaemonConfig(rank=0, hang_timeout=1e9,
+                                   detectors=["failslow", "hang"],
+                                   num_ranks=8))
+    d.attach_fleet(mux, "plumbed")
+    eng = mux.job("plumbed").engine
+    assert [det.name for det in eng.detectors] == ["failslow", "hang"]
+    assert eng.cfg.num_ranks == 8
+
+
+# --------------------------------------------------------------------- #
+# satellites: anomalies_json numpy coercion; zero-copy slices
+# --------------------------------------------------------------------- #
+def test_anomalies_json_coerces_numpy_evidence():
+    a = Anomaly(
+        kind="fail_slow", metric="throughput", team=Team.OPERATIONS,
+        root_cause="x", step=np.int64(4), severity=np.float64(1.5),
+        ranks=[np.int64(3), np.int64(5)],
+        evidence={"drop_frac": np.float32(0.2),
+                  "outlier_ranks": np.array([3, 5]),
+                  "per_kernel": {"mm": np.float64(0.5)},
+                  "names": {"a", "b"}})
+    out = json.loads(anomalies_json([a]))
+    assert out[0]["step"] == 4 and out[0]["ranks"] == [3, 5]
+    ev = out[0]["evidence"]
+    assert ev["outlier_ranks"] == [3, 5]
+    assert ev["per_kernel"]["mm"] == 0.5
+    assert abs(ev["drop_frac"] - 0.2) < 1e-6
+    assert sorted(ev["names"]) == ["a", "b"]
+
+
+def test_slice_rows_views_equal_take(world):
+    prog, _ = world
+    batch = ClusterSimulator(
+        N, prog, seed=3,
+        injections=SCENARIOS["hang"]).run_batch(4)    # hang => extra dicts
+    assert batch.is_step_sorted()
+    order, uniq, bounds = batch.step_index()
+    for j in range(uniq.size):
+        lo, hi = int(bounds[j]), int(bounds[j + 1])
+        view = batch.slice_rows(lo, hi)
+        copy = batch.take(order[lo:hi])
+        # views share memory with the parent columns, takes do not
+        assert np.shares_memory(view.end_ts, batch.end_ts)
+        assert view.to_events() == copy.to_events()
+
+
+def test_fcs_replay_uses_views_and_matches_direct_oracle(world, tmp_path):
+    prog, store = world
+    logdir = tmp_path / "logs"
+    os.makedirs(logdir)
+    jobs = {"jobA-gc": SCENARIOS["gc"], "jobB-jitter": SCENARIOS["jitter"]}
+    oracle = {}
+    for job_id, inj in jobs.items():
+        b = ClusterSimulator(N, prog, seed=7, injections=inj).run_batch(5)
+        trace_store.write_trace(b, str(logdir / f"{job_id}.fcs"))
+        eng = DiagnosticEngine(
+            EngineConfig(backend="dense-train", num_ranks=N), store)
+        eng.ingest_batch(trace_store.read_trace(str(logdir / f"{job_id}.fcs")))
+        oracle[job_id] = [_sig(a) for a in eng.evaluate_all()]
+    mux = FleetMultiplexer(FleetConfig(watermark_delay=1), history=store)
+    for job_id in jobs:
+        mux.add_job(job_id, EngineConfig(backend="dense-train", num_ranks=N))
+    stats = FleetReplayer(mux).replay_dir(str(logdir))
+    got = {j: [] for j in jobs}
+    for fa in mux.poll() + mux.finalize():
+        got[fa.job_id].append(_sig(fa.anomaly))
+    assert stats.files == 2 and stats.corrupt_files == 0
+    for job_id in jobs:
+        assert got[job_id] == oracle[job_id], job_id
