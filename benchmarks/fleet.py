@@ -12,7 +12,10 @@ Measures, per (jobs x ranks x steps) scale:
   * crossjob: a rack-degradation fleet (half the jobs jittering on shared
     racks) with the ``cross_job_failslow`` fleet detector registered —
     the cross-job correlation tier's overhead on the same ingest path,
-    plus the count of INFRASTRUCTURE reclassifications it emits.
+    plus the count of INFRASTRUCTURE reclassifications it emits;
+  * parallel-replay: serial (``job_workers=1``) vs parallel (one worker
+    per job) ``replay_dir`` over FCS logs, asserting byte-equivalent
+    anomalies — the offline re-diagnosis path (ISSUE 5).
 
 Acceptance (ISSUE 2): >= 8 concurrent jobs at 256+ ranks each with
 incremental diagnosis sustaining >= 1 Mev/s aggregate.  Results merge into
@@ -153,6 +156,77 @@ def bench_scale(jobs: int, ranks: int, steps: int) -> dict:
     }
 
 
+def bench_parallel_replay(jobs: int, ranks: int, steps: int) -> dict:
+    """Serial vs parallel ``replay_dir`` over per-job FCS logs (decode is
+    ~free, so this times the diagnosis pipeline itself), ASSERTING the
+    anomaly streams are byte-equivalent.  Scaling is bounded by cores
+    (recorded) and by the GIL share of the per-step detector work."""
+    cfg = get_config("llama-20b-paper")
+    prog = program_from_config(cfg, num_chips=ranks)
+    store = HistoryStore()
+    learner = DiagnosticEngine(
+        EngineConfig(backend="dense-train", num_ranks=ranks), store)
+    learner.ingest_batch(ClusterSimulator(ranks, prog, seed=1).run_batch(3))
+    learner.learn_healthy()
+    chunk_lists, total_events = _make_fleet(prog, jobs, ranks, steps)
+    label = f"{jobs}j_{ranks}r"
+
+    logdir = tempfile.mkdtemp(prefix="flare_preplay_bench_")
+    try:
+        for job_id, chunks in chunk_lists.items():
+            path = os.path.join(logdir, f"{job_id}.fcs")
+            for c in chunks:           # one segment per step, daemon-shaped
+                trace_store.write_trace(c, path, codec="fcs")
+
+        def _run(jw):
+            best, anoms = float("inf"), None
+            for _ in range(3):
+                mux = FleetMultiplexer(FleetConfig(watermark_delay=1),
+                                       history=store)
+                for job_id in chunk_lists:
+                    mux.add_job(job_id, EngineConfig(
+                        backend="dense-train", num_ranks=ranks))
+                t0 = time.perf_counter()
+                stats = FleetReplayer(mux, chunk_bytes=4 << 20).replay_dir(
+                    logdir, job_workers=jw)
+                dt = time.perf_counter() - t0
+                assert stats.events == total_events
+                if dt < best:
+                    best = dt
+                anoms = [str(a) for a in mux.poll()]
+            return best, anoms
+
+        serial_s, serial_anoms = _run(1)
+        # one worker per job, capped at the cores that can actually run
+        # them (oversubscribing a small box just measures GIL convoying)
+        par_workers = min(jobs, os.cpu_count() or 1)
+        par_s, par_anoms = _run(par_workers)
+        if par_anoms != serial_anoms:     # hard equivalence gate (ISSUE 5)
+            raise AssertionError(
+                "parallel replay diagnosis differs from serial: "
+                f"serial={serial_anoms!r} parallel={par_anoms!r}")
+    finally:
+        shutil.rmtree(logdir, ignore_errors=True)
+
+    serial_evs, par_evs = total_events / serial_s, total_events / par_s
+    speedup = par_evs / serial_evs
+    cores = os.cpu_count() or 1
+    emit(f"fleet/parallel_replay_{label}", 1e6 / par_evs,
+         f"{par_evs / 1e6:.2f}Mev_s;serial={serial_evs / 1e6:.2f}Mev_s;"
+         f"{speedup:.2f}x;workers={par_workers};cores={cores};"
+         "equivalent=TRUE")
+    return {
+        "jobs": jobs, "ranks": ranks, "steps": steps,
+        "events": total_events, "cores": cores,
+        "job_workers": par_workers,
+        "replay_serial_events_per_s": serial_evs,
+        "replay_parallel_events_per_s": par_evs,
+        "parallel_speedup": speedup,
+        "diagnosis_byte_equivalent": True,
+        "anomalies": len(serial_anoms),
+    }
+
+
 def bench_crossjob(jobs: int, ranks: int, steps: int) -> dict:
     """Rack-degradation fleet: the first half of the jobs jitter on shared
     racks (two jobs per rack), the rest stay healthy.  Times the same
@@ -223,6 +297,9 @@ def main(quick: bool = False):
     cj_jobs, cj_ranks, cj_steps = (4, 64, 6) if quick else (8, 256, 8)
     results[f"crossjob_{cj_jobs}x{cj_ranks}x{cj_steps}"] = \
         bench_crossjob(cj_jobs, cj_ranks, cj_steps)
+    pr_jobs, pr_ranks, pr_steps = (3, 64, 6) if quick else (4, 256, 8)
+    results[f"parallel_replay_{pr_jobs}x{pr_ranks}x{pr_steps}"] = \
+        bench_parallel_replay(pr_jobs, pr_ranks, pr_steps)
     merge_bench_json(OUT_JSON, results)
     emit("fleet/json", 0.0, f"merged={OUT_JSON}")
     return results

@@ -1,15 +1,19 @@
-"""Trace-storage codecs: bytes/event and replay throughput, JSONL vs FCS.
+"""Trace-storage codecs: bytes/event and replay throughput, JSONL vs
+FCS v1 vs FCS v2 (compressed archival segments).
 
 Measures, per rank scale:
   * write: bytes/event on disk for each codec (the continuous-tracing
-    storage bill — ISSUE 3 target: FCS <= 0.3x JSONL);
-  * decode: full-file -> EventBatch Mev/s for JSONL (line, chunked
-    threads, chunked processes) and FCS (memmap segments) — the replay
-    bottleneck the ROADMAP flagged (ISSUE 3 target: FCS >= 5x JSONL);
+    storage bill — ISSUE 3 target: FCS <= 0.3x JSONL; ISSUE 5 target:
+    FCS v2 <= 0.5x v1);
+  * decode: full-file -> EventBatch Mev/s for JSONL (line, chunked with
+    auto serial fallback, forced chunking, chunked processes), FCS v1
+    (memmap segments), and FCS v2 (slab inflate) — the replay bottleneck
+    the ROADMAP flagged (ISSUE 3 target: FCS >= 5x JSONL);
   * replay-e2e: ``FleetReplayer.replay_dir`` into a multiplexer with
-    incremental diagnosis, per codec, ASSERTING the anomaly streams are
-    byte-equivalent (the FCS file is written from the JSONL-decoded
-    batch, so both formats carry identical values).
+    incremental diagnosis, per codec plus serial-vs-parallel workers,
+    ASSERTING the anomaly streams are byte-equivalent across all of
+    them (the FCS files are written from the JSONL-decoded batch, so
+    every format carries identical values).
 
 Results merge into ``BENCH_storage.json`` keyed by scale.
 
@@ -66,12 +70,14 @@ def bench_scale(ranks: int, steps: int, jobs: int) -> dict:
 
     logdir = tempfile.mkdtemp(prefix="flare_storage_bench_")
     jdir, fdir = os.path.join(logdir, "jsonl"), os.path.join(logdir, "fcs")
+    f2dir = os.path.join(logdir, "fcs2")
     os.makedirs(jdir)
     os.makedirs(fdir)
+    os.makedirs(f2dir)
     try:
-        # ---- write both codecs (FCS from the JSONL-decoded batch, so
-        # the two directories carry bit-identical event values) -------- #
-        total_events = jsonl_bytes = fcs_bytes = 0
+        # ---- write all three codecs (FCS v1/v2 from the JSONL-decoded
+        # batch, so every directory carries bit-identical values) ------ #
+        total_events = jsonl_bytes = fcs_bytes = fcs2_bytes = 0
         for i in range(jobs):
             name, inj_fn = SCENARIOS[i % len(SCENARIOS)]
             batch = ClusterSimulator(ranks, prog, seed=100 + i,
@@ -83,28 +89,44 @@ def bench_scale(ranks: int, steps: int, jobs: int) -> dict:
             rounded = store.read_jsonl(jp)
             fcs_bytes += store.write_trace(
                 rounded, os.path.join(fdir, f"job{i:02d}-{name}.fcs"))
+            fcs2_bytes += store.write_trace(
+                rounded, os.path.join(f2dir, f"job{i:02d}-{name}.fcs2"),
+                codec="fcs2")
         per_ev_jsonl = jsonl_bytes / total_events
         per_ev_fcs = fcs_bytes / total_events
+        per_ev_fcs2 = fcs2_bytes / total_events
         size_ratio = fcs_bytes / jsonl_bytes
+        v2_ratio = fcs2_bytes / fcs_bytes
         emit(f"storage/bytes_per_event_jsonl_{label}", per_ev_jsonl,
              f"total={jsonl_bytes}")
         emit(f"storage/bytes_per_event_fcs_{label}", per_ev_fcs,
              f"total={fcs_bytes};ratio={size_ratio:.3f}x;target<=0.3x")
+        emit(f"storage/bytes_per_event_fcs2_{label}", per_ev_fcs2,
+             f"total={fcs2_bytes};vs_v1={v2_ratio:.3f}x;target<=0.5x;"
+             f"zstd={store.have_zstd()}")
 
         # ---- decode throughput: one job's file, full decode ----------- #
         one_j = sorted(os.listdir(jdir))[0]
         one_f = sorted(os.listdir(fdir))[0]
+        one_f2 = sorted(os.listdir(f2dir))[0]
         jp, fp = os.path.join(jdir, one_j), os.path.join(fdir, one_f)
+        f2p = os.path.join(f2dir, one_f2)
         one_n = len(store.read_jsonl(jp))
 
         decode = {}
         for key, fn in [
             ("jsonl_line", lambda: store.read_jsonl(jp)),
+            # auto-falls back to one serial pass on small files — the
+            # mid-scale regression fix; forced chunking stays measurable
+            # via serial_below=0
             ("jsonl_chunked", lambda: store.read_jsonl_chunked(
                 jp, chunk_bytes=4 << 20)),
+            ("jsonl_chunked_forced", lambda: store.read_jsonl_chunked(
+                jp, chunk_bytes=4 << 20, serial_below=0)),
             ("jsonl_process", lambda: store.read_jsonl_chunked(
                 jp, chunk_bytes=1 << 20, executor="process")),
             ("fcs", lambda: store.read_fcs(fp)),
+            ("fcs2", lambda: store.read_fcs(f2p)),
         ]:
             s, out = _best(fn)
             decode[key] = one_n / s
@@ -115,11 +137,11 @@ def bench_scale(ranks: int, steps: int, jobs: int) -> dict:
              f"{replay_speedup:.1f}x_vs_jsonl_line;target>=5x")
 
         # ---- replay e2e (decode + ingest + incremental diagnosis) ----- #
-        def _replay(directory):
+        def _replay(directory, job_workers=1):
             mux = FleetMultiplexer(FleetConfig(watermark_delay=1),
                                    history=hist)
             stats = FleetReplayer(mux, chunk_bytes=4 << 20).replay_dir(
-                directory)
+                directory, job_workers=job_workers)
             return stats, [str(a) for a in mux.poll()]
 
         t0 = time.perf_counter()
@@ -128,16 +150,37 @@ def bench_scale(ranks: int, steps: int, jobs: int) -> dict:
         t0 = time.perf_counter()
         sf, anoms_fcs = _replay(fdir)
         fcs_e2e = sf.events / (time.perf_counter() - t0)
-        assert sj.events == sf.events == total_events
-        if anoms_jsonl != anoms_fcs:   # hard equivalence gate (ISSUE 3)
+        t0 = time.perf_counter()
+        sf2, anoms_fcs2 = _replay(f2dir)
+        fcs2_e2e = sf2.events / (time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        sp, anoms_par = _replay(fdir, job_workers=jobs)   # parallel
+        par_e2e = sp.events / (time.perf_counter() - t0)
+        assert sj.events == sf.events == sf2.events == sp.events \
+            == total_events
+        # hard equivalence gates: across codecs (ISSUE 3) and across
+        # serial/parallel replay (ISSUE 5)
+        if anoms_jsonl != anoms_fcs or anoms_fcs != anoms_fcs2:
             raise AssertionError(
                 "fleet diagnosis differs between codecs: "
-                f"jsonl={anoms_jsonl!r} fcs={anoms_fcs!r}")
+                f"jsonl={anoms_jsonl!r} fcs={anoms_fcs!r} "
+                f"fcs2={anoms_fcs2!r}")
+        if anoms_par != anoms_fcs:
+            raise AssertionError(
+                "parallel replay diagnosis differs from serial: "
+                f"serial={anoms_fcs!r} parallel={anoms_par!r}")
         emit(f"storage/replay_e2e_jsonl_{label}", 1e6 / jsonl_e2e,
              f"{jsonl_e2e / 1e6:.2f}Mev_s;anomalies={len(anoms_jsonl)}")
         emit(f"storage/replay_e2e_fcs_{label}", 1e6 / fcs_e2e,
              f"{fcs_e2e / 1e6:.2f}Mev_s;equivalent=TRUE;"
              f"{fcs_e2e / jsonl_e2e:.1f}x")
+        emit(f"storage/replay_e2e_fcs2_{label}", 1e6 / fcs2_e2e,
+             f"{fcs2_e2e / 1e6:.2f}Mev_s;equivalent=TRUE;"
+             f"{fcs2_e2e / fcs_e2e:.2f}x_vs_v1")
+        emit(f"storage/replay_e2e_fcs_parallel_{label}", 1e6 / par_e2e,
+             f"{par_e2e / 1e6:.2f}Mev_s;equivalent=TRUE;"
+             f"{par_e2e / fcs_e2e:.2f}x_vs_serial;"
+             f"workers={sp.job_workers}")
     finally:
         shutil.rmtree(logdir, ignore_errors=True)
 
@@ -146,10 +189,15 @@ def bench_scale(ranks: int, steps: int, jobs: int) -> dict:
         "events": total_events,
         "bytes_per_event_jsonl": per_ev_jsonl,
         "bytes_per_event_fcs": per_ev_fcs,
+        "bytes_per_event_fcs2": per_ev_fcs2,
         "size_ratio_fcs_vs_jsonl": size_ratio,
+        "size_ratio_fcs2_vs_fcs": v2_ratio,
+        "zstd_available": store.have_zstd(),
         "decode_events_per_s": decode,
         "fcs_decode_speedup_vs_jsonl_line": replay_speedup,
-        "replay_e2e_events_per_s": {"jsonl": jsonl_e2e, "fcs": fcs_e2e},
+        "replay_e2e_events_per_s": {"jsonl": jsonl_e2e, "fcs": fcs_e2e,
+                                    "fcs2": fcs2_e2e,
+                                    "fcs_parallel": par_e2e},
         "diagnosis_byte_equivalent": True,
         "anomalies": len(anoms_jsonl),
     }

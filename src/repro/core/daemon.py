@@ -41,8 +41,16 @@ class DaemonConfig:
     drain_interval: float = 0.05
     log_path: Optional[str] = None
     # spill codec: None = infer from log_path extension ("jsonl" default;
-    # a ".fcs" path spills binary columnar segments — see repro.store)
+    # ".fcs" spills binary columnar segments, ".fcs2" compressed archival
+    # segments — see repro.store).  "fcs2" may also be named explicitly
+    # to write v2 segments into a ".fcs" path (readers dispatch on the
+    # segment version byte, so mixed files replay fine).
     log_codec: Optional[str] = None
+    # archival-spill compression: backend name ("zstd"/"zlib"; None =
+    # best available) and level for FCS v2 segments.  Setting either
+    # implies log_codec="fcs2".
+    log_compression: Optional[str] = None
+    log_compression_level: Optional[int] = None
     # rotate the spill to <stem>.segNNN<ext> once the current file passes
     # this size; None = single file forever (historical behavior)
     log_rotate_bytes: Optional[int] = None
@@ -78,9 +86,17 @@ class TracingDaemon:
         self._attached = False
         self._spill = None
         if self.cfg.log_path:
-            from repro.store import SegmentedTraceWriter
+            from repro.store import FcsV2Codec, SegmentedTraceWriter
+            codec = self.cfg.log_codec
+            if (self.cfg.log_compression is not None
+                    or self.cfg.log_compression_level is not None):
+                # an explicit compression knob means the archival (v2)
+                # spill, with a per-daemon backend/level instance
+                codec = FcsV2Codec(
+                    compression=self.cfg.log_compression,
+                    level=self.cfg.log_compression_level)
             self._spill = SegmentedTraceWriter(
-                self.cfg.log_path, codec=self.cfg.log_codec,
+                self.cfg.log_path, codec=codec,
                 rotate_bytes=self.cfg.log_rotate_bytes)
 
     # ------------------------------------------------------------------ #

@@ -34,6 +34,7 @@ Conservative policy (paper §8.2): the engine *reports*; it never kills jobs.
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -76,6 +77,7 @@ class DiagnosticEngine:
         self.anomalies: list[Anomaly] = []
         self._evaluated: set[int] = set()   # steps seen by the incremental path
         self._finalized = False
+        self._finalize_lock = threading.Lock()
         self.ctx = DetectorContext(config=config, history=self.history)
         self.detectors = resolve_detectors(config.detectors)
         for d in self.detectors:
@@ -167,12 +169,16 @@ class DiagnosticEngine:
         return out
 
     def finalize_detectors(self) -> list[Anomaly]:
-        """End-of-stream hook: every detector's ``finalize()``, once.
-        The built-ins return nothing here; stateful third-party detectors
-        (e.g. trend accumulators) flush their tail findings."""
-        if self._finalized:
-            return []
-        self._finalized = True
+        """End-of-stream hook: every detector's ``finalize()``, once —
+        the check-and-set is locked so an engine driven from a replay
+        worker thread and finalized from the main thread can't run a
+        stateful detector's flush twice.  The built-ins return nothing
+        here; stateful third-party detectors (e.g. trend accumulators)
+        flush their tail findings."""
+        with self._finalize_lock:
+            if self._finalized:
+                return []
+            self._finalized = True
         found: list[Anomaly] = []
         for d in self.detectors:
             found.extend(d.finalize())

@@ -114,6 +114,12 @@ class FleetMultiplexer:
         self._lock = threading.RLock()    # job REGISTRY only; work is
         #                                   guarded by each job's own lock
         self._fleet_det_lock = threading.Lock()   # cross-job tier state
+        # parallel-replay support: while deferred, fleet-scope
+        # observations are buffered per job instead of hitting the
+        # (order-sensitive) cross-job detectors from racing worker
+        # threads; resolve_fleet_tier replays them deterministically
+        self._defer_fleet = False
+        self._deferred_fleet: dict[str, list] = {}
 
     # ------------------------------------------------------------------ #
     # job registry
@@ -210,6 +216,43 @@ class FleetMultiplexer:
                 job.count_anomaly()
             self._observe_fleet(job.job_id, s, anoms, ts)
 
+    def defer_fleet_tier(self) -> None:
+        """Buffer fleet-scope observations instead of running them.
+
+        Cross-job detectors are ORDER-sensitive (a correlation window
+        closes against whichever observation arrived last), so parallel
+        replay workers racing into the tier would make fleet emissions
+        depend on thread scheduling.  While deferred, each closed step's
+        ``(step, anomalies, ts)`` is queued per job; call
+        :meth:`resolve_fleet_tier` after the workers join."""
+        with self._fleet_det_lock:
+            self._defer_fleet = True
+
+    def resolve_fleet_tier(self, job_order: Optional[list] = None) -> None:
+        """Stop deferring and replay the buffered observations through
+        the fleet tier job by job — exactly the sequence a serial
+        one-job-at-a-time replay produces, so the merged stream is
+        byte-equivalent to serial replay.  ``job_order`` must be the
+        order the serial path would have processed jobs in (the replayer
+        passes its sorted-path group order — job-REGISTRATION order is
+        not equivalent when callers pre-registered jobs differently);
+        ``None`` falls back to registration order."""
+        with self._fleet_det_lock:
+            self._defer_fleet = False
+            deferred, self._deferred_fleet = self._deferred_fleet, {}
+        if not deferred:
+            return
+        order = list(job_order) if job_order is not None \
+            else [j.job_id for j in self.jobs]
+        for job_id in order:
+            for step, anoms, ts in deferred.pop(job_id, ()):
+                self._observe_fleet(job_id, step, anoms, ts)
+        # observations for jobs outside the given order (shouldn't happen
+        # — replay passes every job it replayed) still reach the detectors
+        for job_id, obs in deferred.items():
+            for step, anoms, ts in obs:
+                self._observe_fleet(job_id, step, anoms, ts)
+
     def _observe_fleet(self, job_id: str, step: int, anoms: list,
                        ts: float) -> None:
         """Feed one closed step's anomalies to the fleet-scope tier and
@@ -220,6 +263,10 @@ class FleetMultiplexer:
         # jobs, so unlike the per-job engines their state is shared by
         # every ingest thread
         with self._fleet_det_lock:
+            if self._defer_fleet:
+                self._deferred_fleet.setdefault(job_id, []).append(
+                    (step, list(anoms), ts))
+                return
             for fd in self.fleet_detectors:
                 for jid, a in fd.observe_step(job_id, step, anoms, ts):
                     self.stream.push(jid, a, ts, origin="fleet")

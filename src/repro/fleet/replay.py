@@ -9,22 +9,43 @@ directories replay in one pass:
 
   * JSONL files split on line boundaries and decode concurrently
     (``executor="process"`` scales the json-parse-bound decode past the
-    GIL — ``EventBatch`` pickles cheaply);
-  * FCS files memory-map and stream segment by segment, each segment
-    ingested as step-aligned slices so the per-job watermark closes and
-    diagnoses steps exactly as it would have live (and peak memory stays
-    one step, not one file);
+    GIL — ``EventBatch`` pickles cheaply; small files auto-fall back to
+    one serial pass);
+  * FCS files memory-map and stream segment by segment (v2 segments
+    inflate slab-wise), each segment ingested as step-aligned slices so
+    the per-job watermark closes and diagnoses steps exactly as it would
+    have live (and peak memory stays one step, not one file);
   * corrupt input is skipped and counted, never fatal: undecodable JSONL
     lines, truncated FCS tails from killed writers (every intact leading
     segment still replays), and unreadable files.
+
+``replay_dir`` is a PARALLEL pipeline: per-job engines are lock-isolated
+(``repro.fleet.multiplexer``), so one worker thread per job drives that
+job's decode -> step-aligned ingest -> incremental diagnosis chain
+end to end, overlapping jobs on a multi-core box.  A bounded per-job
+prefetch queue lets each job's decode run a couple of chunks ahead of
+its diagnosis (backpressure: a slow engine stalls its own decoder, not
+the fleet's memory).  The result is byte-equivalent to serial replay:
+
+  * jobs are registered up front in sorted path order, so registration
+    (and thus flush/finalize) order never depends on thread timing;
+  * per-worker ``ReplayStats`` merge deterministically after the join
+    (``per_job`` is emitted key-sorted either way);
+  * the order-sensitive fleet-scope detector tier is DEFERRED while
+    workers run and resolved job by job afterwards
+    (``FleetMultiplexer.defer_fleet_tier``), reproducing the serial
+    one-job-at-a-time observation sequence.
 """
 from __future__ import annotations
 
 import glob
 import os
+import queue
+import threading
 import time
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Iterable, Iterator, Optional
 
 from repro.fleet.multiplexer import FleetMultiplexer
 from repro.store import (CodecError, codec_for_path, codecs,
@@ -38,6 +59,54 @@ def _known_patterns() -> tuple[str, ...]:
                  for ext in c.extensions)
 
 
+_END = object()
+
+
+def _iter_prefetch(it: Iterable, depth: int) -> Iterator:
+    """Pull ``it`` on a helper thread through a bounded queue: the
+    producer (chunk decode) runs at most ``depth`` items ahead of the
+    consumer (ingest + diagnosis).  Exceptions — including the
+    ``CodecError`` a truncated tail raises mid-file — cross the queue
+    and re-raise at the consumption point, after every chunk decoded
+    before them was delivered (the skip-and-count contract)."""
+    q: "queue.Queue" = queue.Queue(maxsize=max(depth, 1))
+    cancel = threading.Event()
+
+    def _put(pair) -> bool:
+        while not cancel.is_set():
+            try:
+                q.put(pair, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False                         # consumer gone; stop pumping
+
+    def _pump():
+        end = (_END, None)
+        try:
+            for item in it:
+                if not _put((item, None)):
+                    return
+        except BaseException as e:           # delivered, not swallowed
+            end = (_END, e)
+        _put(end)
+
+    t = threading.Thread(target=_pump, daemon=True,
+                         name="flare-replay-prefetch")
+    t.start()
+    try:
+        while True:
+            item, exc = q.get()
+            if item is _END:
+                if exc is not None:
+                    raise exc
+                return
+            yield item
+    finally:
+        cancel.set()
+        t.join(timeout=5.0)
+
+
 @dataclass
 class ReplayStats:
     files: int = 0
@@ -46,21 +115,50 @@ class ReplayStats:
     corrupt_files: int = 0       # files with a CodecError (bad magic,
     #                              truncated FCS tail, unknown format)
     seconds: float = 0.0
+    job_workers: int = 1         # worker threads the replay actually used
     per_job: dict = field(default_factory=dict)   # job_id -> events
 
     @property
     def events_per_s(self) -> float:
         return self.events / self.seconds if self.seconds > 0 else 0.0
 
+    def merge(self, other: "ReplayStats") -> None:
+        """Fold one worker's job-local stats in (call in a deterministic
+        job order — the parallel path merges sorted-by-job after the
+        join, so totals and ``per_job`` never depend on thread timing)."""
+        self.files += other.files
+        self.events += other.events
+        self.skipped_lines += other.skipped_lines
+        self.corrupt_files += other.corrupt_files
+        for job_id, ev in other.per_job.items():
+            self.per_job[job_id] = self.per_job.get(job_id, 0) + ev
+
 
 class FleetReplayer:
+    """Replays trace directories into a :class:`FleetMultiplexer`.
+
+    ``chunk_bytes``/``max_workers``/``executor``/``serial_below`` tune
+    the per-file chunk decode (JSONL); ``job_workers`` caps the per-job
+    worker threads of :meth:`replay_dir` (``None`` = auto: one per job
+    up to the core count on boxes with enough cores to overlap the
+    GIL-releasing numpy windows, serial otherwise; ``1`` = serial; an
+    explicit ``N`` is always honored); ``prefetch`` bounds how many
+    decoded chunks each job may queue ahead of its diagnosis (``0``
+    disables the pipeline and decodes inline)."""
+
     def __init__(self, mux: FleetMultiplexer, *, chunk_bytes: int = 8 << 20,
                  max_workers: Optional[int] = None,
-                 executor: str = "thread"):
+                 executor: str = "thread",
+                 serial_below: Optional[int] = None,
+                 job_workers: Optional[int] = None,
+                 prefetch: int = 2):
         self.mux = mux
         self.chunk_bytes = chunk_bytes
         self.max_workers = max_workers
         self.executor = executor
+        self.serial_below = serial_below
+        self.job_workers = job_workers
+        self.prefetch = prefetch
 
     def _ingest_step_aligned(self, job_id: str, batch) -> None:
         """Feed one decoded chunk as per-step slices in step order, so a
@@ -97,9 +195,13 @@ class FleetReplayer:
         codec = codec_for_path(path)
         events = skipped = 0
         try:
-            for batch, sk in codec.iter_chunks(
-                    path, chunk_bytes=self.chunk_bytes,
-                    max_workers=self.max_workers, executor=self.executor):
+            chunks = codec.iter_chunks(
+                path, chunk_bytes=self.chunk_bytes,
+                max_workers=self.max_workers, executor=self.executor,
+                serial_below=self.serial_below)
+            if self.prefetch > 0:
+                chunks = _iter_prefetch(chunks, self.prefetch)
+            for batch, sk in chunks:
                 events += len(batch)
                 skipped += sk
                 self._ingest_step_aligned(job_id, batch)
@@ -109,25 +211,13 @@ class FleetReplayer:
             stats.corrupt_files += 1
         return events, skipped
 
-    def replay_dir(self, directory: str, *, pattern: Optional[str] = None,
-                   flush: bool = True) -> ReplayStats:
-        """Replay every trace file in ``directory`` (all registered
-        formats when ``pattern`` is None), then flush the fleet so
-        trailing steps and hangs are diagnosed.  Rotated spill files
-        (``job.fcs``, ``job.seg001.fcs``, …) replay into one job, in
-        order; files that fail to decode are skipped and counted.
-        Anomalies are left in the multiplexer's stream for the caller to
-        ``poll()``.  Returns throughput stats."""
-        patterns = (pattern,) if pattern is not None else _known_patterns()
-        # numeric rotation order: lexicographic sorting would put
-        # seg1000 before seg999 on months-long streams
-        paths = sorted({p for pat in patterns
-                        for p in glob.glob(os.path.join(directory, pat))},
-                       key=lambda p: (job_id_for_path(p), seg_index(p), p))
-        stats = ReplayStats()
-        t0 = time.perf_counter()
+    def _replay_job(self, job_id: str, paths: list[str],
+                    stats: ReplayStats) -> ReplayStats:
+        """One job's full pipeline: every rotated/renamed piece in
+        order, decode -> step-aligned ingest -> incremental diagnosis on
+        that job's (lock-isolated) engine.  Accounting lands on the
+        caller-supplied ``stats`` — job-local in the parallel path."""
         for path in paths:
-            job_id = job_id_for_path(path)
             pre_corrupt = stats.corrupt_files
             try:
                 ev, sk = self.replay_file(job_id, path, stats)
@@ -140,7 +230,78 @@ class FleetReplayer:
             stats.events += ev
             stats.skipped_lines += sk
             stats.per_job[job_id] = stats.per_job.get(job_id, 0) + ev
+        return stats
+
+    def _resolve_job_workers(self, n_jobs: int,
+                             override: Optional[int]) -> int:
+        w = override if override is not None else self.job_workers
+        if w is None:
+            cores = os.cpu_count() or 1
+            # Auto mode is conservative: per-step diagnosis interleaves
+            # short GIL-held Python with GIL-releasing numpy windows, so
+            # worker threads only overlap usefully when there are enough
+            # cores for the windows to land on; measured on a 2-core box
+            # the convoy cost makes even independent replays ~0.5-0.8x.
+            # Explicit ``job_workers=N`` always honors the caller.
+            w = 1 if cores < 4 else cores
+        return max(1, min(w, n_jobs))
+
+    def replay_dir(self, directory: str, *, pattern: Optional[str] = None,
+                   flush: bool = True,
+                   job_workers: Optional[int] = None) -> ReplayStats:
+        """Replay every trace file in ``directory`` (all registered
+        formats when ``pattern`` is None), then flush the fleet so
+        trailing steps and hangs are diagnosed.  Rotated spill files
+        (``job.fcs``, ``job.seg001.fcs``, …) replay into one job, in
+        order; files that fail to decode are skipped and counted.
+
+        Multi-job directories replay in PARALLEL, one worker per job
+        (capped by ``job_workers``/cores), each worker owning its job's
+        decode -> ingest -> diagnose chain; anomalies and stats are
+        byte-equivalent to a ``job_workers=1`` serial replay (see module
+        docstring for how ordering is pinned).  Anomalies are left in
+        the multiplexer's stream for the caller to ``poll()``.  Returns
+        throughput stats."""
+        patterns = (pattern,) if pattern is not None else _known_patterns()
+        # numeric rotation order: lexicographic sorting would put
+        # seg1000 before seg999 on months-long streams
+        paths = sorted({p for pat in patterns
+                        for p in glob.glob(os.path.join(directory, pat))},
+                       key=lambda p: (job_id_for_path(p), seg_index(p), p))
+        groups: dict[str, list[str]] = {}
+        for p in paths:
+            groups.setdefault(job_id_for_path(p), []).append(p)
+        workers = self._resolve_job_workers(len(groups), job_workers)
+        stats = ReplayStats(job_workers=workers)
+        t0 = time.perf_counter()
+        if workers <= 1:
+            for job_id, jpaths in groups.items():
+                self._replay_job(job_id, jpaths, stats)
+        else:
+            # registration order must not depend on which worker ingests
+            # first: it decides flush/finalize order and fleet-tier
+            # resolution order
+            for job_id in groups:
+                self.mux.add_job(job_id)
+            self.mux.defer_fleet_tier()
+            try:
+                with ThreadPoolExecutor(
+                        workers, thread_name_prefix="flare-replay") as ex:
+                    futs = {job_id: ex.submit(self._replay_job, job_id,
+                                              jpaths, ReplayStats())
+                            for job_id, jpaths in groups.items()}
+                    # merge in sorted-path (group) order, not completion
+                    # order: totals are sums either way, but determinism
+                    # is the contract
+                    for job_id in groups:
+                        stats.merge(futs[job_id].result())
+            finally:
+                # resolve in THIS replay's group order — the order the
+                # serial path feeds the tier — not registration order,
+                # which differs when callers pre-registered jobs
+                self.mux.resolve_fleet_tier(job_order=list(groups))
         if flush:
             self.mux.flush()
         stats.seconds = time.perf_counter() - t0
+        stats.per_job = dict(sorted(stats.per_job.items()))
         return stats

@@ -5,9 +5,10 @@ the stream wraps them with the job id, the event time (end of the step
 slice that fired), a fleet-wide arrival sequence number, and the routing
 target for the anomaly's team (paper Table 1: operations / algorithm /
 infrastructure / cross-team).  ``drain()`` returns everything pushed since
-the last drain merged across jobs in ``(ts, seq)`` order — jobs advance at
-their own pace, so total order is per drain; a terminal ``finalize`` drain
-is fully ordered.
+the last drain merged across jobs in ``(ts, job_id, seq)`` order — jobs
+advance at their own pace, so total order is per drain; a terminal
+``finalize`` drain is fully ordered, and equal-timestamp ties across jobs
+break by job id, not by (thread-scheduling-dependent) arrival.
 """
 from __future__ import annotations
 
@@ -71,7 +72,12 @@ class AnomalyStream:
     def drain(self) -> list[FleetAnomaly]:
         with self._lock:
             out, self._pending = self._pending, []
-        out.sort(key=lambda a: (a.ts, a.seq))
+        # ts first; equal-ts ties break by job THEN arrival: within one
+        # job arrival order is meaningful (one thread pushes that job's
+        # anomalies in order) but ACROSS jobs it is thread-scheduling —
+        # two jobs replaying the same recorded timestamps must drain
+        # identically whether replayed serially or on parallel workers
+        out.sort(key=lambda a: (a.ts, a.job_id, a.seq))
         return out
 
     def __len__(self) -> int:

@@ -13,7 +13,8 @@ See ``src/repro/store/README.md`` for the FCS on-disk layout.
 from repro.store.base import (CodecError, TraceCodec, codec_for_path,
                               codecs, get_codec, register_codec,
                               sniff_format)
-from repro.store.fcs import FcsCodec, read_fcs, write_fcs
+from repro.store.compress import have_zstd
+from repro.store.fcs import (FcsCodec, FcsV2Codec, read_fcs, write_fcs)
 from repro.store.jsonl import (JsonlCodec, iter_jsonl_chunks, read_jsonl,
                                read_jsonl_chunked)
 from repro.store.writer import (SegmentedTraceWriter, job_id_for_path,
@@ -21,6 +22,7 @@ from repro.store.writer import (SegmentedTraceWriter, job_id_for_path,
 
 JSONL = register_codec(JsonlCodec())
 FCS = register_codec(FcsCodec())
+FCS2 = register_codec(FcsV2Codec())
 
 
 def read_trace(path: str, *, codec: str | None = None,
@@ -43,7 +45,8 @@ def iter_trace_chunks(path: str, *, codec: str | None = None, **opts):
 
 
 __all__ = [
-    "CodecError", "TraceCodec", "JsonlCodec", "FcsCodec", "JSONL", "FCS",
+    "CodecError", "TraceCodec", "JsonlCodec", "FcsCodec", "FcsV2Codec",
+    "JSONL", "FCS", "FCS2", "have_zstd",
     "register_codec", "get_codec", "codecs", "codec_for_path",
     "sniff_format", "read_trace", "write_trace", "iter_trace_chunks",
     "read_jsonl", "read_jsonl_chunked", "iter_jsonl_chunks", "read_fcs",

@@ -24,6 +24,20 @@ lossless:
 (Python-literal ``repr`` when it round-trips — preserving tuples exactly,
 which JSON cannot — else JSON) plus sparse (row, code) index columns.
 
+Two segment versions share the header and reader (dispatch is on the
+header version field, so one file may even mix them — e.g. a daemon
+restarted with a different spill config):
+
+  v1  column slabs stored raw; decoding is zero-copy ``np.memmap`` views
+      (the online / hot-replay format);
+  v2  each column slab individually compressed (zstd when available,
+      stdlib zlib otherwise; RAW slabs byte-shuffled first) — the
+      archival format, ~2-3x smaller again, trading the memmap fast path
+      for a per-slab inflate.  Header, interning blobs, and the column
+      directory stay uncompressed so magic sniffing, segment skipping,
+      and per-column tooling keep working.  Write it via the ``fcs2``
+      codec (:class:`FcsV2Codec`) or ``write_fcs(..., version=2)``.
+
 The exact byte layout is documented in ``src/repro/store/README.md``.
 Corruption (bad magic, unknown version, a truncated tail from a killed
 writer) raises :class:`~repro.store.base.CodecError` with file + byte
@@ -42,15 +56,26 @@ from typing import Iterator, Optional
 import numpy as np
 
 from repro.core.columnar import NO_INT, EventBatch
+from repro.store import compress as _comp
 from repro.store.base import CodecError
 
 MAGIC = b"FCS1"
-VERSION = 1
+VERSION = 1                              # default (raw-slab) segment version
+VERSION_V2 = 2                           # compressed-slab segment version
+_VERSIONS = (VERSION, VERSION_V2)
 
 # header: magic, version, ncols, n_rows, seg_len, names_len, groups_len,
 # extra_len — 48 bytes, so the blob region after it stays 8-aligned.
+# Identical for v1 and v2 (seg_len is always the on-disk byte count).
 _HEADER = struct.Struct("<4sHHQQQQQ")
-_DIRENT = struct.Struct("<BBBBI")        # col_id, enc, dtype/src, 0, len
+_DIRENT = struct.Struct("<BBBBI")        # v1: col_id, enc, dtype/src, 0, len
+# v2: col_id, enc, dtype/src, comp (backend | FLAG_SHUFFLE),
+#     compressed len, raw len
+_DIRENT2 = struct.Struct("<BBBBII")
+
+# slabs below this stay uncompressed in v2: backend framing would only
+# grow them, and they are noise next to the timestamp slabs anyway
+_MIN_COMPRESS_BYTES = 128
 
 # encodings
 ENC_ABSENT, ENC_CONST, ENC_RAW, ENC_DICT, ENC_SAMEAS = range(5)
@@ -207,14 +232,46 @@ def _deserialize_meta(s: str) -> dict:
     return json.loads(s[2:])
 
 
-def encode_segment(batch: EventBatch) -> bytes:
-    """One self-contained segment for ``batch`` (appendable bytes)."""
+def _compress_slab(payload: bytes, enc: int, dt_byte: int, backend: int,
+                   level: Optional[int]) -> tuple[int, bytes]:
+    """(comp byte, on-disk bytes) for one v2 slab.  RAW slabs of multi-
+    byte values are byte-shuffled first (timestamps dominate segment
+    size and shuffle is what makes them compress); a slab that would not
+    shrink is stored verbatim so v2 never exceeds v1 + directory."""
+    if len(payload) < _MIN_COMPRESS_BYTES:
+        return _comp.COMP_STORED, payload
+    flags = 0
+    data = payload
+    if enc == ENC_RAW:
+        itemsize = np.dtype(_DTYPES[dt_byte]).itemsize
+        if itemsize > 1:
+            data = _comp.shuffle(payload, itemsize)
+            flags = _comp.FLAG_SHUFFLE
+    cdata = _comp.compress(data, backend, level)
+    if len(cdata) >= len(payload):
+        return _comp.COMP_STORED, payload
+    return backend | flags, cdata
+
+
+def encode_segment(batch: EventBatch, *, version: int = VERSION,
+                   compression: Optional[str] = None,
+                   level: Optional[int] = None) -> bytes:
+    """One self-contained segment for ``batch`` (appendable bytes).
+
+    ``version=2`` compresses each column slab (``compression`` names the
+    backend — ``"zstd"``/``"zlib"``/``None`` = best available — and
+    ``level`` its setting); header, interning blobs, and the column
+    directory stay plain."""
+    if version not in _VERSIONS:
+        raise ValueError(f"unsupported FCS segment version {version}")
     n = len(batch)
     names_blob = json.dumps(batch.names, separators=(",", ":")).encode() \
         if batch.names else b""
     groups_blob = json.dumps(batch.groups, separators=(",", ":")).encode() \
         if batch.groups else b""
     extra_blob, extra_rows, extra_codes = _encode_extra(batch)
+    backend = _comp.resolve_backend(compression) if version == VERSION_V2 \
+        else None
 
     entries: list[bytes] = []
     payloads: list[bytes] = []
@@ -232,14 +289,23 @@ def encode_segment(batch: EventBatch) -> bytes:
         # SAMEAS stores the source column id (always start_ts) in the
         # dtype slot
         dt_byte = 4 if enc == ENC_SAMEAS else _DT_CODE[dt]
-        entries.append(_DIRENT.pack(col_id, enc, dt_byte, 0, len(payload)))
-        payloads.append(payload + b"\0" * _pad8(len(payload)))
+        if version == VERSION_V2:
+            comp, disk = _compress_slab(payload, enc, dt_byte, backend,
+                                        level)
+            entries.append(_DIRENT2.pack(col_id, enc, dt_byte, comp,
+                                         len(disk), len(payload)))
+        else:
+            disk = payload
+            entries.append(_DIRENT.pack(col_id, enc, dt_byte, 0,
+                                        len(payload)))
+        payloads.append(disk + b"\0" * _pad8(len(disk)))
 
+    directory = b"".join(entries)
     blob = names_blob + groups_blob + extra_blob
-    body = blob + b"\0" * _pad8(len(blob)) + b"".join(entries) \
-        + b"".join(payloads)
+    body = blob + b"\0" * _pad8(len(blob)) + directory \
+        + b"\0" * _pad8(len(directory)) + b"".join(payloads)
     seg_len = _HEADER.size + len(body)
-    header = _HEADER.pack(MAGIC, VERSION, NCOLS, n, seg_len,
+    header = _HEADER.pack(MAGIC, version, NCOLS, n, seg_len,
                           len(names_blob), len(groups_blob),
                           len(extra_blob))
     return header + body
@@ -257,10 +323,105 @@ def _view(buf, dtype: str, count: int, offset: int,
                          path=path, offset=offset) from e
 
 
+def _decode_col(arrays, sameas, col_id: int, enc: int, dt_byte: int,
+                buf, pos: int, plen: int, n: int, path: str) -> None:
+    """Decode one column slab (``plen`` raw bytes of ``buf`` at ``pos``)
+    into ``arrays[col_id]``.  Shared by v1 (slab = file view) and v2
+    (slab = inflated bytes)."""
+    _, rdtype, null, _wide = _COLUMNS[col_id]
+
+    def _need(expected: int):
+        # a corrupted length field must fail loudly here: frombuffer
+        # reads from `pos` regardless of plen while the cursor advances
+        # BY plen, so a mismatch would silently shift every later column
+        if plen != expected:
+            raise CodecError(
+                f"column {col_id} slab length {plen} != expected "
+                f"{expected} for encoding {enc}", path=path, offset=pos)
+
+    if enc == ENC_ABSENT:
+        _need(0)
+        # the sparse extra index columns (11, 12) carry their own
+        # length; every real column has n_rows entries
+        arrays[col_id] = np.empty(0, np.int64) if col_id >= 11 \
+            else np.full(n, null, rdtype)
+    elif enc == ENC_SAMEAS:
+        _need(0)
+        sameas.append((col_id, dt_byte))
+    elif enc == ENC_CONST:
+        dt = _DTYPES[dt_byte]
+        _need(np.dtype(dt).itemsize)
+        arrays[col_id] = np.full(n, _view(buf, dt, 1, pos, path)[0],
+                                 rdtype)
+    elif enc == ENC_RAW:
+        dt = _DTYPES[dt_byte]
+        isz = np.dtype(dt).itemsize
+        if col_id < 11:
+            _need(n * isz)
+            cnt = n
+        else:
+            if plen % isz:
+                raise CodecError(f"column {col_id} slab length {plen} "
+                                 f"not a multiple of itemsize {isz}",
+                                 path=path, offset=pos)
+            cnt = plen // isz
+        a = _view(buf, dt, cnt, pos, path)
+        arrays[col_id] = a if a.dtype == np.dtype(rdtype) \
+            else a.astype(rdtype)
+    elif enc == ENC_DICT:
+        cdt = _DTYPES[dt_byte]
+        if plen < 4:
+            raise CodecError(f"column {col_id} DICT payload too short",
+                             path=path, offset=pos)
+        (ntab,) = struct.unpack_from("<I", buf, pos)
+        _need(4 + ntab * 8 + n * np.dtype(cdt).itemsize)
+        is_f = np.dtype(rdtype).kind == "f"
+        table = _view(buf, "<u8" if is_f else "<i8", ntab, pos + 4, path)
+        codes = _view(buf, cdt, n, pos + 4 + ntab * 8, path)
+        if codes.size and int(codes.max()) >= ntab:
+            raise CodecError(f"column {col_id} DICT code "
+                             f"{int(codes.max())} out of table range "
+                             f"{ntab}", path=path, offset=pos)
+        out = table[codes]
+        arrays[col_id] = out.view(np.float64) if is_f \
+            else out.astype(rdtype, copy=False)
+    else:
+        raise CodecError(f"unknown encoding {enc} for column {col_id}",
+                         path=path, offset=pos)
+
+
+def _inflate_slab(buf, pay: int, clen: int, rlen: int, comp: int,
+                  dt_byte: int, path: str) -> bytes:
+    """v2 slab -> raw bytes: decompress with the per-slab backend, then
+    undo the byte shuffle when the writer applied one."""
+    backend = comp & _comp.COMP_MASK
+    if backend == _comp.COMP_STORED:
+        data = bytes(buf[pay:pay + clen])
+        if len(data) != rlen:
+            raise CodecError(f"stored slab is {len(data)} bytes, "
+                             f"directory declares {rlen}",
+                             path=path, offset=pay)
+    else:
+        data = _comp.decompress(buf[pay:pay + clen], backend, rlen,
+                                path=path, offset=pay)
+    if comp & _comp.FLAG_SHUFFLE:
+        if dt_byte >= len(_DTYPES):
+            raise CodecError(f"shuffled slab with bad dtype byte {dt_byte}",
+                             path=path, offset=pay)
+        isz = np.dtype(_DTYPES[dt_byte]).itemsize
+        if isz <= 1 or len(data) % isz:
+            raise CodecError("shuffled slab length inconsistent with "
+                             f"dtype itemsize {isz}", path=path, offset=pay)
+        data = _comp.unshuffle(data, isz)
+    return data
+
+
 def decode_segment(buf, off: int, path: str) -> tuple[EventBatch, int]:
     """Decode one segment of ``buf`` starting at byte ``off``; returns
-    ``(batch, next_offset)``.  Raises :class:`CodecError` on a bad magic,
-    unsupported version, or a slab truncated by a killed writer."""
+    ``(batch, next_offset)``.  Dispatches on the header version field
+    (v1 raw slabs / v2 compressed slabs).  Raises :class:`CodecError` on
+    a bad magic, unsupported version, or a slab truncated by a killed
+    writer."""
     size = len(buf)
     if off + _HEADER.size > size:
         raise CodecError("truncated segment header "
@@ -271,7 +432,7 @@ def decode_segment(buf, off: int, path: str) -> tuple[EventBatch, int]:
     if magic != MAGIC:
         raise CodecError(f"bad magic {magic!r} (expected {MAGIC!r})",
                          path=path, offset=off)
-    if version != VERSION:
+    if version not in _VERSIONS:
         raise CodecError(f"unsupported FCS version {version}",
                          path=path, offset=off)
     if ncols < NCOLS:
@@ -299,83 +460,38 @@ def decode_segment(buf, off: int, path: str) -> tuple[EventBatch, int]:
                          path=path, offset=p) from e
     blob = names_len + groups_len + extra_len
     p += blob + _pad8(blob)
-    if p + ncols * _DIRENT.size > off + seg_len:
+    dirent = _DIRENT if version == VERSION else _DIRENT2
+    dir_bytes = ncols * dirent.size
+    if p + dir_bytes > off + seg_len:
         raise CodecError("column directory overruns segment "
                          "(corrupt blob lengths)", path=path, offset=p)
 
     arrays: list[Optional[np.ndarray]] = [None] * NCOLS
     sameas: list[tuple[int, int]] = []
-    pay = p + ncols * _DIRENT.size
+    pay = p + dir_bytes + _pad8(dir_bytes)
     for i in range(ncols):
-        col_id, enc, dt_byte, _, plen = _DIRENT.unpack_from(
-            buf, p + i * _DIRENT.size)
-        if pay + plen > off + seg_len:
+        ent = p + i * dirent.size
+        if version == VERSION:
+            col_id, enc, dt_byte, _, disk_len = _DIRENT.unpack_from(buf, ent)
+        else:
+            col_id, enc, dt_byte, comp, disk_len, raw_len = \
+                _DIRENT2.unpack_from(buf, ent)
+        if pay + disk_len > off + seg_len:
             raise CodecError(f"column {col_id} slab overruns segment",
                              path=path, offset=pay)
         if col_id >= NCOLS:      # forward-compat: ignore unknown columns
-            pay += plen + _pad8(plen)
+            pay += disk_len + _pad8(disk_len)
             continue
-        _, rdtype, null, _wide = _COLUMNS[col_id]
-
-        def _need(expected: int):
-            # a corrupted length field must fail loudly here: frombuffer
-            # reads from `pay` regardless of plen while `pay` advances BY
-            # plen, so a mismatch would silently shift every later column
-            if plen != expected:
-                raise CodecError(
-                    f"column {col_id} slab length {plen} != expected "
-                    f"{expected} for encoding {enc}", path=path, offset=pay)
-
-        if enc == ENC_ABSENT:
-            _need(0)
-            # the sparse extra index columns (11, 12) carry their own
-            # length; every real column has n_rows entries
-            arrays[col_id] = np.empty(0, np.int64) if col_id >= 11 \
-                else np.full(n, null, rdtype)
-        elif enc == ENC_SAMEAS:
-            _need(0)
-            sameas.append((col_id, dt_byte))
-        elif enc == ENC_CONST:
-            dt = _DTYPES[dt_byte]
-            _need(np.dtype(dt).itemsize)
-            arrays[col_id] = np.full(n, _view(buf, dt, 1, pay, path)[0],
-                                     rdtype)
-        elif enc == ENC_RAW:
-            dt = _DTYPES[dt_byte]
-            isz = np.dtype(dt).itemsize
-            if col_id < 11:
-                _need(n * isz)
-                cnt = n
-            else:
-                if plen % isz:
-                    raise CodecError(f"column {col_id} slab length {plen} "
-                                     f"not a multiple of itemsize {isz}",
-                                     path=path, offset=pay)
-                cnt = plen // isz
-            a = _view(buf, dt, cnt, pay, path)
-            arrays[col_id] = a if a.dtype == np.dtype(rdtype) \
-                else a.astype(rdtype)
-        elif enc == ENC_DICT:
-            cdt = _DTYPES[dt_byte]
-            if plen < 4:
-                raise CodecError(f"column {col_id} DICT payload too short",
-                                 path=path, offset=pay)
-            (ntab,) = struct.unpack_from("<I", buf, pay)
-            _need(4 + ntab * 8 + n * np.dtype(cdt).itemsize)
-            is_f = np.dtype(rdtype).kind == "f"
-            table = _view(buf, "<u8" if is_f else "<i8", ntab, pay + 4, path)
-            codes = _view(buf, cdt, n, pay + 4 + ntab * 8, path)
-            if codes.size and int(codes.max()) >= ntab:
-                raise CodecError(f"column {col_id} DICT code "
-                                 f"{int(codes.max())} out of table range "
-                                 f"{ntab}", path=path, offset=pay)
-            out = table[codes]
-            arrays[col_id] = out.view(np.float64) if is_f \
-                else out.astype(rdtype, copy=False)
+        if version == VERSION:
+            # raw slab decoded in place: memmap views stay zero-copy
+            _decode_col(arrays, sameas, col_id, enc, dt_byte,
+                        buf, pay, disk_len, n, path)
         else:
-            raise CodecError(f"unknown encoding {enc} for column {col_id}",
-                             path=path, offset=pay)
-        pay += plen + _pad8(plen)
+            slab = _inflate_slab(buf, pay, disk_len, raw_len, comp,
+                                 dt_byte, path)
+            _decode_col(arrays, sameas, col_id, enc, dt_byte,
+                        slab, 0, raw_len, n, path)
+        pay += disk_len + _pad8(disk_len)
     for col_id, src in sameas:
         if arrays[src] is None:
             raise CodecError(f"SAMEAS column {col_id} references "
@@ -440,20 +556,31 @@ def read_fcs(path: str, *, with_skip_count: bool = False,
     return (batch, 0) if with_skip_count else batch
 
 
-def write_fcs(batch: EventBatch, path: str) -> int:
-    """Append one segment; returns bytes written."""
-    seg = encode_segment(batch)
+def write_fcs(batch: EventBatch, path: str, *, version: int = VERSION,
+              compression: Optional[str] = None,
+              level: Optional[int] = None) -> int:
+    """Append one segment; returns bytes written.  ``version=2`` writes a
+    compressed archival segment (see :func:`encode_segment`)."""
+    seg = encode_segment(batch, version=version, compression=compression,
+                         level=level)
     with open(path, "ab") as f:
         f.write(seg)
     return len(seg)
 
 
 class FcsCodec:
+    """v1 (raw-slab) writer; the read side handles both versions, so one
+    file may mix v1 and v2 segments and still decode in one pass."""
+
     name = "fcs"
     extensions = (".fcs",)
+    version = VERSION
+    compression: Optional[str] = None
+    level: Optional[int] = None
 
     def write(self, batch: EventBatch, path: str) -> int:
-        return write_fcs(batch, path)
+        return write_fcs(batch, path, version=self.version,
+                         compression=self.compression, level=self.level)
 
     def read(self, path: str, *, with_skip_count: bool = False):
         return read_fcs(path, with_skip_count=with_skip_count)
@@ -462,3 +589,20 @@ class FcsCodec:
                     ) -> Iterator[tuple[EventBatch, int]]:
         for batch in iter_segments(path):
             yield batch, 0
+
+
+class FcsV2Codec(FcsCodec):
+    """Archival FCS: zstd/zlib-compressed column slabs (~2-3x smaller on
+    long-horizon logs), same reader, same replay path.  Registered as
+    ``"fcs2"`` — select it with ``DaemonConfig(log_codec="fcs2")``, a
+    ``.fcs2`` spill extension, or instantiate with an explicit backend
+    and level for custom ratio/speed trade-offs."""
+
+    name = "fcs2"
+    extensions = (".fcs2",)
+    version = VERSION_V2
+
+    def __init__(self, compression: Optional[str] = None,
+                 level: Optional[int] = None):
+        self.compression = compression
+        self.level = level

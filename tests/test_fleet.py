@@ -283,6 +283,183 @@ def test_single_rank_suspect_does_not_declare_fleet_hang():
     assert len(anoms) == 1 and anoms[0].anomaly.kind == "hang"
 
 
+def _write_mixed_fleet_logs(logdir, prog):
+    """Four jobs, four storage shapes: plain JSONL, rotated FCS v1
+    pieces, FCS v2 with a truncated tail, and single-file FCS v1 —
+    the mixed directory the parallel pipeline must replay exactly like
+    serial.  Returns job_id -> decoded oracle batch."""
+    from repro import store as trace_store
+    os.makedirs(logdir, exist_ok=True)
+    oracle = {}
+
+    # job-a: JSONL (diagnosis sees the rounded timestamps)
+    b = ClusterSimulator(N, prog, seed=11,
+                         injections=SCENARIOS["gc"]).run_batch(5)
+    jp = os.path.join(logdir, "job-a.jsonl")
+    b.write_jsonl(jp)
+    oracle["job-a"] = EventBatch.from_jsonl(jp)
+
+    # job-b: FCS v1 rotated into .segNNN pieces, one segment per step
+    b = ClusterSimulator(N, prog, seed=12,
+                         injections=SCENARIOS["underclock"]).run_batch(5)
+    w = trace_store.SegmentedTraceWriter(
+        os.path.join(logdir, "job-b.fcs"), codec="fcs", rotate_bytes=1)
+    for c in _step_chunks(b):
+        w.write(c)
+    assert len(w.paths) >= 3
+    oracle["job-b"] = EventBatch.concat(
+        [trace_store.read_fcs(p) for p in w.paths])
+
+    # job-c: FCS v2 with a corrupt trailing segment (killed writer) —
+    # the intact leading segments still replay, the tail is counted
+    b = ClusterSimulator(N, prog, seed=13,
+                         injections=SCENARIOS["jitter"]).run_batch(5)
+    cp = os.path.join(logdir, "job-c.fcs2")
+    trace_store.write_fcs(b, cp, version=2)
+    intact = os.path.getsize(cp)
+    trace_store.write_fcs(b, cp, version=2)
+    with open(cp, "r+b") as f:
+        f.truncate(intact + 57)
+    oracle["job-c"] = b
+
+    # job-d: single-file FCS v1
+    b = ClusterSimulator(N, prog, seed=14).run_batch(5)
+    trace_store.write_fcs(b, os.path.join(logdir, "job-d.fcs"))
+    oracle["job-d"] = b
+    return oracle
+
+
+def _replay(logdir, store, fleet_cfg=None, topo=None, **replayer_kw):
+    mux = FleetMultiplexer(fleet_cfg or FleetConfig(watermark_delay=1),
+                           history=store)
+    # register in REVERSE order on purpose: equivalence must not lean on
+    # registration order matching the replayer's sorted-path order
+    for job in ("job-d", "job-c", "job-b", "job-a"):
+        mux.add_job(job, EngineConfig(backend="dense-train", num_ranks=N))
+        if topo:
+            mux.set_topology(job, **topo.get(job, {}))
+    stats = FleetReplayer(mux, **replayer_kw).replay_dir(logdir)
+    return stats, [(fa.job_id, fa.origin, _sig(fa.anomaly))
+                   for fa in mux.poll()]
+
+
+def test_parallel_replay_matches_serial_on_mixed_dir(world, tmp_path):
+    """The tentpole gate: a mixed JSONL / rotated-FCS / truncated-v2
+    directory replayed with per-job workers must produce byte-identical
+    anomalies AND stats to the serial (job_workers=1) replay."""
+    prog, store = world
+    logdir = str(tmp_path / "logs")
+    oracle = _write_mixed_fleet_logs(logdir, prog)
+
+    s1, a1 = _replay(logdir, store, job_workers=1)
+    s4, a4 = _replay(logdir, store, job_workers=4)
+    assert s4.job_workers == 4 and s1.job_workers == 1
+    assert a4 == a1
+    assert a1                                 # the scenarios actually alarm
+    assert s4.events == s1.events
+    assert s4.per_job == s1.per_job
+    assert list(s4.per_job) == sorted(s4.per_job)     # deterministic order
+    assert s4.files == s1.files
+    assert s4.corrupt_files == s1.corrupt_files == 1  # job-c's torn tail
+    assert s4.skipped_lines == s1.skipped_lines == 0
+    # every job's full (intact) log was ingested
+    assert s4.per_job["job-a"] == len(oracle["job-a"])
+    assert s4.per_job["job-b"] == len(oracle["job-b"])
+    assert s4.per_job["job-c"] == len(oracle["job-c"])  # leading segment
+    assert s4.per_job["job-d"] == len(oracle["job-d"])
+    # and prefetch=0 (no pipeline) is equivalent too
+    s0, a0 = _replay(logdir, store, job_workers=4, prefetch=0)
+    assert a0 == a1 and s0.per_job == s1.per_job
+
+
+def test_parallel_replay_fleet_tier_matches_serial(world, tmp_path):
+    """Cross-job correlation is order-sensitive; the deferred fleet tier
+    must make parallel replay's INFRASTRUCTURE reclassifications
+    byte-identical to serial replay's."""
+    prog, store = world
+    from repro import store as trace_store
+    logdir = str(tmp_path / "logs")
+    os.makedirs(logdir)
+    # three jitter jobs on one shared rack + one healthy control
+    for i, job in enumerate(("job-a", "job-b", "job-c")):
+        b = ClusterSimulator(N, prog, seed=20 + i,
+                             injections=SCENARIOS["jitter"]).run_batch(6)
+        trace_store.write_fcs(b, os.path.join(logdir, f"{job}.fcs"))
+    trace_store.write_fcs(
+        ClusterSimulator(N, prog, seed=30).run_batch(6),
+        os.path.join(logdir, "job-d.fcs"))
+    topo = {j: {"rack": "rack0", "switch": "sw0"}
+            for j in ("job-a", "job-b", "job-c")}
+    topo["job-d"] = {"rack": "rack9", "switch": "sw9"}
+
+    def cfg():
+        return FleetConfig(watermark_delay=1,
+                           fleet_detectors=["cross_job_failslow"])
+
+    s1, a1 = _replay(logdir, store, fleet_cfg=cfg(), topo=topo,
+                     job_workers=1)
+    s4, a4 = _replay(logdir, store, fleet_cfg=cfg(), topo=topo,
+                     job_workers=4)
+    assert a4 == a1
+    fleet_emissions = [x for x in a1 if x[1] == "fleet"]
+    assert len(fleet_emissions) >= 2          # the correlator actually fired
+    assert s4.per_job == s1.per_job
+
+
+def test_parallel_replay_identical_timestamps_across_jobs(world, tmp_path):
+    """Two jobs carrying the SAME recorded timestamps (one trace under
+    two job ids) tie on every anomaly ts; the stream's job-id tie-break
+    must keep parallel replay deterministic and equal to serial."""
+    prog, store = world
+    from repro import store as trace_store
+    logdir = str(tmp_path / "logs")
+    os.makedirs(logdir)
+    b = ClusterSimulator(N, prog, seed=41,
+                         injections=SCENARIOS["gc"]).run_batch(5)
+    for job in ("job-x", "job-y"):
+        trace_store.write_fcs(b, os.path.join(logdir, f"{job}.fcs"))
+
+    def run(jw):
+        mux = FleetMultiplexer(FleetConfig(watermark_delay=1),
+                               history=store)
+        for job in ("job-y", "job-x"):          # reversed registration
+            mux.add_job(job, EngineConfig(backend="dense-train",
+                                          num_ranks=N))
+        FleetReplayer(mux).replay_dir(logdir, job_workers=jw)
+        return [(fa.job_id, fa.ts, _sig(fa.anomaly)) for fa in mux.poll()]
+
+    serial = run(1)
+    assert serial                       # the scenario alarms, ts all tie
+    for _ in range(3):                  # scheduling-independence
+        assert run(2) == serial
+
+
+def test_fcs2_zlib_fallback_clamps_zstd_level(tmp_path):
+    """A zstd-tuned level (1..22) must survive the zlib fallback — zlib
+    only accepts -1..9 and a raise here would silently kill the daemon
+    spill path."""
+    from repro import store as trace_store
+    prog = get_config("llama-20b-paper")
+    b = ClusterSimulator(8, program_from_config(prog, num_chips=8),
+                         seed=1).run_batch(2)
+    path = str(tmp_path / "lvl.fcs2")
+    trace_store.write_fcs(b, path, version=2, compression="zlib", level=19)
+    got = trace_store.read_trace(path)
+    assert len(got) == len(b)
+    assert np.array_equal(got.end_ts, b.end_ts)
+
+
+def test_replay_stats_merge():
+    from repro.fleet import ReplayStats
+    a = ReplayStats(files=2, events=10, skipped_lines=1, corrupt_files=0,
+                    per_job={"a": 10})
+    b = ReplayStats(files=1, events=5, corrupt_files=2, per_job={"b": 5})
+    a.merge(b)
+    assert (a.files, a.events, a.skipped_lines, a.corrupt_files) == \
+        (3, 15, 1, 2)
+    assert a.per_job == {"a": 10, "b": 5}
+
+
 def test_daemon_attach_fleet_and_idempotent_stop():
     mux = FleetMultiplexer(FleetConfig(watermark_delay=0))
     d = TracingDaemon(DaemonConfig(rank=0, drain_interval=0.01,

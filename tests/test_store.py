@@ -170,6 +170,176 @@ def test_fcs_memmap_survives_writer_and_handle_close(tmp_path):
 
 
 # --------------------------------------------------------------------- #
+# FCS v2 (compressed archival segments)
+# --------------------------------------------------------------------- #
+def test_fcs2_roundtrip_byte_equivalent_and_smaller(tmp_path):
+    b = _sim([Injection(kind="gc", duration=0.25, period_ops=5)], steps=3)
+    p1, p2 = str(tmp_path / "t.fcs"), str(tmp_path / "t.fcs2")
+    n1 = store.write_fcs(b, p1)
+    n2 = store.write_trace(b, p2, codec="fcs2")
+    assert n2 == os.path.getsize(p2)
+    _assert_batches_byte_equal(b, store.read_trace(p2))
+    # v1 and v2 decode to the same batch, and v2 is the archival win
+    _assert_batches_byte_equal(store.read_fcs(p1), store.read_fcs(p2))
+    assert n2 < n1 * 0.6, f"v2 {n2}B not meaningfully smaller than v1 {n1}B"
+
+
+def test_fcs2_roundtrip_meta_heavy(tmp_path):
+    """Tuples, nested meta, hang stacks survive v2 exactly as v1 — the
+    interning/meta blobs are stored plain, only slabs are compressed."""
+    bld = EventBatchBuilder()
+    shared = {"shape": (8, 16, 32), "layout": "R,C"}
+    for r in range(6):
+        bld.append_event(TraceEvent(
+            EventKind.KERNEL_COMPUTE, "mm", r, 1.0, 1.25, 2.0, step=0,
+            meta={"flops": 1e12, **shared}))
+        bld.append_event(TraceEvent(
+            EventKind.HANG_SUSPECT, "hang_suspect", r, 3.0, 3.0, 3.0,
+            step=1, meta={"stack": [f"f{i}" for i in range(3)],
+                          "nested": {"a": [1, (2, 3)], "b": None}}))
+    b = bld.build()
+    path = str(tmp_path / "m.fcs2")
+    store.write_trace(b, path, codec="fcs2")
+    rb = store.read_trace(path)
+    _assert_batches_byte_equal(b, rb)
+    row = next(r for r, d in rb.extra.items() if "shape" in d)
+    assert rb.extra[row]["shape"] == (8, 16, 32)
+    assert isinstance(rb.extra[row]["shape"], tuple)
+
+
+def test_fcs2_empty_batch_and_tiny_slabs(tmp_path):
+    """Empty/tiny segments take the stored (uncompressed) slab path."""
+    path = str(tmp_path / "e.fcs2")
+    store.write_trace(EventBatch.empty(), path, codec="fcs2")
+    _assert_batches_byte_equal(EventBatch.empty(), store.read_trace(path))
+
+
+def test_fcs_mixed_version_segments_in_one_file(tmp_path):
+    """A daemon restarted with a different spill config appends v2
+    segments after v1 ones; the reader dispatches per segment."""
+    b1, b2 = _sim(seed=1, steps=2), _sim(seed=2, steps=2)
+    path = str(tmp_path / "t.fcs")
+    store.write_fcs(b1, path)                    # v1 segment
+    store.write_fcs(b2, path, version=2)         # v2 segment, same file
+    chunks = [c for c, _ in store.iter_trace_chunks(path)]
+    assert len(chunks) == 2
+    _assert_batches_byte_equal(b1, chunks[0])
+    _assert_batches_byte_equal(b2, chunks[1])
+
+
+def test_fcs2_truncated_tail_keeps_leading_segments(tmp_path):
+    b1, b2 = _sim(seed=1, steps=1), _sim(seed=2, steps=1)
+    path = str(tmp_path / "t.fcs2")
+    store.write_trace(b1, path, codec="fcs2")
+    n1 = os.path.getsize(path)
+    store.write_trace(b2, path, codec="fcs2")
+    n2 = os.path.getsize(path)
+    with open(path, "r+b") as f:       # kill the writer mid-slab
+        f.truncate(n1 + (n2 - n1) // 2)
+    got = []
+    with pytest.raises(store.CodecError) as ei:
+        for chunk, _ in store.iter_trace_chunks(path):
+            got.append(chunk)
+    assert ei.value.offset == n1 and "truncated" in str(ei.value)
+    assert len(got) == 1
+    _assert_batches_byte_equal(b1, got[0])
+
+
+def test_fcs2_bitflip_in_compressed_slab_is_codec_error(tmp_path):
+    """Bit-rot inside a compressed slab must surface as CodecError (the
+    zlib/zstd checksum or the inflated-length check catches it)."""
+    b = _sim(seed=5, steps=2)
+    path = str(tmp_path / "rot.fcs2")
+    store.write_trace(b, path, codec="fcs2")
+    raw = bytearray(open(path, "rb").read())
+    raw[-40:] = b"\xff" * 40
+    open(path, "wb").write(bytes(raw))
+    with pytest.raises(store.CodecError):
+        store.read_trace(path, codec="fcs")
+    mux = FleetMultiplexer(FleetConfig(watermark_delay=1))
+    stats = FleetReplayer(mux).replay_dir(str(tmp_path))
+    assert stats.corrupt_files == 1
+
+
+def test_fcs2_zstd_absent_falls_back_to_zlib(tmp_path, monkeypatch):
+    """Without the zstandard package an explicit 'zstd' request warns
+    once (counted) and writes zlib-backed v2 — never fails the spill."""
+    from repro.store import compress as comp
+    monkeypatch.setattr(comp, "_zstd", None)
+    monkeypatch.setattr(comp, "zstd_fallbacks", 0)
+    b = _sim(seed=3, steps=2)
+    path = str(tmp_path / "zb.fcs2")
+    with pytest.warns(UserWarning, match="zstandard is not installed"):
+        store.write_fcs(b, path, version=2, compression="zstd")
+    assert comp.zstd_fallbacks == 1
+    store.write_fcs(b, path, version=2, compression="zstd")  # warns once
+    assert comp.zstd_fallbacks == 2
+    _assert_batches_byte_equal(
+        EventBatch.concat([b, b]), store.read_trace(path))
+
+
+def test_fcs2_zstd_slab_without_library_is_codec_error(tmp_path,
+                                                       monkeypatch):
+    """Reading a genuinely zstd-compressed slab on a box without the
+    package must raise a clear CodecError, not crash."""
+    from repro.store import compress as comp
+    from repro.store.fcs import _DIRENT2, _HEADER
+    b = _sim(seed=3, steps=2)
+    path = str(tmp_path / "z.fcs2")
+    store.write_fcs(b, path, version=2)
+    # rewrite every compressed dirent's backend byte to claim zstd
+    raw = bytearray(open(path, "rb").read())
+    _, _, _, _, _, names_len, groups_len, extra_len = \
+        _HEADER.unpack_from(raw, 0)
+    blob = names_len + groups_len + extra_len
+    dir_off = _HEADER.size + blob + (-blob % 8)
+    changed = 0
+    for i in range(13):
+        ent = dir_off + i * _DIRENT2.size
+        col_id, enc, dt, cb, clen, rlen = _DIRENT2.unpack_from(raw, ent)
+        if cb & comp.COMP_MASK == comp.COMP_ZLIB:
+            _DIRENT2.pack_into(raw, ent, col_id, enc, dt,
+                               comp.COMP_ZSTD | (cb & comp.FLAG_SHUFFLE),
+                               clen, rlen)
+            changed += 1
+    assert changed > 0
+    open(path, "wb").write(bytes(raw))
+    monkeypatch.setattr(comp, "_zstd", None)
+    with pytest.raises(store.CodecError, match="zstandard"):
+        store.read_trace(path, codec="fcs")
+
+
+@pytest.mark.skipif(not store.have_zstd(), reason="zstandard not installed")
+def test_fcs2_zstd_backend_roundtrip(tmp_path):
+    b = _sim(seed=3, steps=2)
+    path = str(tmp_path / "zs.fcs2")
+    store.write_fcs(b, path, version=2, compression="zstd")
+    _assert_batches_byte_equal(b, store.read_trace(path))
+
+
+def test_fcs2_daemon_spill_knob(tmp_path):
+    """DaemonConfig.log_compression implies the archival v2 spill."""
+    log = str(tmp_path / "d.fcs")
+    d = TracingDaemon(DaemonConfig(rank=3, log_path=log,
+                                   log_compression="zlib",
+                                   log_compression_level=9,
+                                   reconstruct=False))
+    for step in range(3):
+        d.step_begin(step)
+        d.record_span(EventKind.KERNEL_COMPUTE, "mm", 0.1 * step,
+                      0.1 * step + 0.05, flops=1e9)
+        d.step_end(tokens=128)
+        d._flush()
+    assert d.bytes_logged > 0
+    from repro.store.fcs import _HEADER
+    with open(log, "rb") as f:
+        magic, version = _HEADER.unpack_from(f.read(_HEADER.size))[:2]
+    assert magic == b"FCS1" and version == 2
+    batches = [store.read_trace(p) for p in d.log_paths]
+    assert sum(len(x) for x in batches) == d.events_emitted == 6
+
+
+# --------------------------------------------------------------------- #
 # corruption hardening
 # --------------------------------------------------------------------- #
 def test_fcs_bad_magic_raises_with_location(tmp_path):
@@ -436,10 +606,16 @@ def test_jsonl_process_executor_matches_thread(tmp_path):
     batch = _sim(seed=8, steps=3)
     path = str(tmp_path / "t.jsonl")
     store.write_trace(batch, path)
-    thread = store.read_jsonl_chunked(path, chunk_bytes=1 << 14)
+    # serial_below=0: force real chunking on this small file — the
+    # auto-fallback would otherwise decode it in one serial pass
+    thread = store.read_jsonl_chunked(path, chunk_bytes=1 << 14,
+                                      serial_below=0)
     proc = store.read_jsonl_chunked(path, chunk_bytes=1 << 14,
-                                    executor="process", max_workers=2)
+                                    executor="process", max_workers=2,
+                                    serial_below=0)
     _assert_batches_byte_equal(thread, proc)
+    serial = store.read_jsonl_chunked(path, chunk_bytes=1 << 14)
+    _assert_batches_byte_equal(thread, serial)   # fallback: same result
     with pytest.raises(ValueError, match="executor"):
         store.read_jsonl_chunked(path, executor="fiber")
 
@@ -449,7 +625,7 @@ def test_replayer_process_executor(tmp_path):
     store.write_trace(batch, str(tmp_path / "job-p.jsonl"))
     mux = FleetMultiplexer(FleetConfig(watermark_delay=1))
     mux.add_job("job-p", EngineConfig(backend="dense-train", num_ranks=N))
-    stats = FleetReplayer(mux, chunk_bytes=1 << 14,
-                          executor="process").replay_dir(str(tmp_path))
+    stats = FleetReplayer(mux, chunk_bytes=1 << 14, executor="process",
+                          serial_below=0).replay_dir(str(tmp_path))
     assert stats.events == len(batch)
     assert len(mux.job("job-p").evaluated) > 0
