@@ -10,6 +10,8 @@ Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/_util.emit).
              BENCH_fleet.json)
   §Store  -> storage (JSONL vs FCS bytes/event + replay Mev/s;
              BENCH_storage.json)
+  §Robust -> scenarios (fault matrix, scored detector P/R;
+             BENCH_scenarios.json)
 """
 from __future__ import annotations
 
@@ -20,7 +22,7 @@ import traceback
 def main() -> None:
     from benchmarks import (case2_matmul, fleet, hang, ingest, issue_dist,
                             logsize, overhead, regression, roofline,
-                            storage, vminority)
+                            scenarios, storage, vminority)
     sections = [
         ("fig8_overhead", overhead.main),
         ("fig9_logsize", logsize.main),
@@ -33,6 +35,7 @@ def main() -> None:
         ("scale_ingest", ingest.main),
         ("scale_fleet", fleet.main),
         ("scale_storage", storage.main),
+        ("robust_scenarios", scenarios.main),
     ]
     print("name,us_per_call,derived")
     failures = []

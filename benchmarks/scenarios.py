@@ -1,0 +1,116 @@
+"""Scenario matrix benchmark: scored detector precision/recall in CI.
+
+Sweeps the labelled fault library (``repro.scenarios``) over model-zoo
+configs, grades every cell against its machine-readable ground truth, and
+asserts hard floors — CI FAILS when a fault is missed, routed to the
+wrong team, attributed to the wrong ranks, or a healthy run raises any
+anomaly.  Per-detector precision/recall merge into ``BENCH_scenarios.json``
+keyed by config so the trajectory accumulates across partial runs.
+
+Floors:
+  * every faulty cell caught (matrix recall == 1.0)
+  * team + culprit-rank + onset attribution correct on every catch
+  * healthy cells raise ZERO anomalies
+  * micro precision >= 0.95 (allowed secondary symptoms don't count
+    against precision; anything else does)
+
+    PYTHONPATH=src python -m benchmarks.scenarios [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks._util import emit, merge_bench_json
+from repro.scenarios import run_matrix, score_matrix
+from repro.scenarios.library import FAULT_KINDS, SCENARIOS
+
+OUT_JSON = "BENCH_scenarios.json"
+
+QUICK_CONFIGS = ["qwen2-0.5b"]
+FULL_CONFIGS = ["qwen2-0.5b", "llama3.2-1b", "mamba2-780m", "dbrx-132b"]
+
+PRECISION_FLOOR = 0.95
+RECALL_FLOOR = 1.0
+MIN_QUICK_SCENARIOS = 6      # ISSUE 6 CI floor
+MIN_FAULT_KINDS = 8
+
+
+def assert_floors(cells, scores) -> None:
+    faulty = [c for c in cells if not c.healthy]
+    assert len({c.scenario for c in cells}) >= MIN_QUICK_SCENARIOS, \
+        f"matrix too small: {len(cells)} cells"
+    assert len([k for k in FAULT_KINDS if k]) >= MIN_FAULT_KINDS, \
+        f"fault taxonomy shrank: {FAULT_KINDS}"
+    missed = [f"{c.scenario}@{c.config}" for c in faulty if not c.caught]
+    assert not missed, f"MISSED anomalies: {missed}"
+    bad_team = [f"{c.scenario}@{c.config}" for c in faulty
+                if c.caught and not c.team_ok]
+    assert not bad_team, f"wrong team routing: {bad_team}"
+    bad_ranks = [f"{c.scenario}@{c.config}" for c in faulty
+                 if c.caught and not c.ranks_ok]
+    assert not bad_ranks, f"culprit ranks not attributed: {bad_ranks}"
+    bad_onset = [f"{c.scenario}@{c.config}" for c in faulty
+                 if c.caught and not c.onset_ok]
+    assert not bad_onset, f"fired before injection onset: {bad_onset}"
+    noisy = [f"{c.scenario}@{c.config}" for c in cells
+             if c.healthy and c.anomalies]
+    assert not noisy, f"healthy cells raised anomalies: {noisy}"
+    assert scores["micro_precision"] >= PRECISION_FLOOR, \
+        f"precision {scores['micro_precision']:.3f} < {PRECISION_FLOOR} " \
+        f"(false positives: {scores['false_positive_cells']})"
+    assert scores["micro_recall"] >= RECALL_FLOOR, \
+        f"recall {scores['micro_recall']:.3f} < {RECALL_FLOOR}"
+
+
+def main(quick: bool = False) -> dict:
+    configs = QUICK_CONFIGS if quick else FULL_CONFIGS
+    results = {}
+    all_cells = []
+    for config_name in configs:
+        t0 = time.perf_counter()
+        cells = run_matrix([config_name])
+        dt = time.perf_counter() - t0
+        all_cells.extend(cells)
+        scores = score_matrix(cells)
+        results[config_name] = {
+            "cells": scores["cells"],
+            "caught": scores["cells"] - len(scores["missed"]),
+            "micro_precision": round(scores["micro_precision"], 4),
+            "micro_recall": round(scores["micro_recall"], 4),
+            "detectors": scores["detectors"],
+            "seconds": round(dt, 2),
+        }
+        emit(f"scenarios[{config_name}]", 1e6 * dt / max(len(cells), 1),
+             f"{scores['cells']} cells "
+             f"P={scores['micro_precision']:.2f} "
+             f"R={scores['micro_recall']:.2f}")
+
+    scores = score_matrix(all_cells)
+    assert_floors(all_cells, scores)
+    emit("scenarios[matrix]", 0.0,
+         f"{scores['cells']} cells {scores['faulty_cells']} faulty "
+         f"P={scores['micro_precision']:.2f} "
+         f"R={scores['micro_recall']:.2f}")
+    merge_bench_json(
+        OUT_JSON, results,
+        meta={"scenarios": len(SCENARIOS),
+              "fault_kinds": list(FAULT_KINDS),
+              "precision_floor": PRECISION_FLOOR,
+              "recall_floor": RECALL_FLOOR},
+        section="configs")
+    return scores
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--quick", action="store_true",
+                   help="smallest config only (CI tier)")
+    args = p.parse_args()
+    try:
+        main(quick=args.quick)
+    except AssertionError as e:
+        print(f"# SCENARIO FLOOR VIOLATION: {e}")
+        sys.exit(1)
+    print("# scenario matrix floors held")

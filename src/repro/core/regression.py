@@ -28,10 +28,13 @@ ALIGN_BYTES = 128          # tensor-core/MXU tile alignment (paper Case-2)
 FLOPS_REGRESSION_FRAC = 0.75
 BW_REGRESSION_FRAC = 0.7
 
-# APIs owned by algorithm teams vs infrastructure (routing, Table 1)
+# APIs owned by algorithm teams vs infrastructure (routing, Table 1).
+# Checkpoint writes are storage-subsystem work: a checkpoint-write storm
+# (L4 taxonomy) pages infrastructure, not the model owners.
 ALGORITHM_APIS = ("block_until_ready", "synchronize", "timer", "gc.collect",
                   "package", "version", "mask")
-INFRA_APIS = ("memory", "allocator", "cuda_malloc", "compile")
+INFRA_APIS = ("memory", "allocator", "cuda_malloc", "compile",
+              "checkpoint", "ckpt")
 
 
 @dataclass

@@ -12,11 +12,20 @@ jitter), void time (uninstrumented kernels, slow dataloader) and hangs all
 reproduce the paper's timeline behaviour deterministically — at 1024+
 simulated ranks on one host.  A real fleet feeds the same engine from the
 per-process daemons instead; nothing in the engine knows which source it is.
+
+Fault injection is PLUGGABLE (``repro.core.injectors``): every
+``Injection`` resolves through the injector registry to a
+:class:`~repro.core.injectors.FaultInjector` whose hooks this loop drives
+at fixed points — host pre-op stalls, cpu/device duration transforms,
+minority device time, post-collective sync, hang triggers.  The nine
+legacy kinds are themselves registered plugins, byte-equivalent to the
+historical inline if-chain; the L4 production taxonomy (checkpoint
+storms, ECC throttling, network flaps, MoE stragglers, serving
+interference) and any site-specific fault register the same way.
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, field
 from typing import Optional
 
 import numpy as np
@@ -24,6 +33,8 @@ import numpy as np
 from repro.configs import ModelConfig
 from repro.core.columnar import EventBatch, EventBatchBuilder
 from repro.core.events import EventKind, TraceEvent
+from repro.core.injectors import (FaultInjector, Injection,  # noqa: F401
+                                  resolve_injections)
 
 # ----------------------------------------------------------------------- #
 # Program model
@@ -43,11 +54,15 @@ class SimOp:
 def program_from_config(cfg: ModelConfig, *, tokens_global: int = 262144,
                         num_chips: int = 32, layer_groups: int = 8,
                         mfu: float = 0.45, chip_flops: float = 197e12,
-                        link_bw: float = 5e10) -> list[SimOp]:
+                        link_bw: float = 5e10,
+                        moe_experts: int = 0) -> list[SimOp]:
     """Per-chip, per-step op program whose durations follow the arch FLOPs.
 
     The model+batch are sharded over ``num_chips``; durations/flops/bytes
     are the per-chip share, so issue-latency scales stay realistic.
+    ``moe_experts > 0`` splits each MoE group's FFN share into that many
+    per-expert kernels (``moe_ffn[g].expert{e}``) for expert-skew
+    scenarios; it is ignored for non-MoE architectures.
     """
     n_active = cfg.active_param_count()
     step_flops = 6.0 * n_active * tokens_global / num_chips
@@ -55,43 +70,27 @@ def program_from_config(cfg: ModelConfig, *, tokens_global: int = 262144,
     ops: list[SimOp] = [SimOp("dataloader.next_batch", "cpu", 1e-3)]
     # split each group: attention-ish op (40%), ffn-ish op (60%), one comm
     comm_bytes = int(2 * 2 * n_active / (layer_groups * num_chips))
+    experts = moe_experts if cfg.num_experts else 0
     for g in range(layer_groups):
         ops.append(SimOp(f"attn_core[{g}]", "compute",
                          0.4 * per_group / (chip_flops * mfu),
                          flops=0.4 * per_group))
-        ops.append(SimOp(f"ffn_matmul[{g}]", "compute",
-                         0.6 * per_group / (chip_flops * mfu),
-                         flops=0.6 * per_group,
-                         meta={"shape": (8192, cfg.d_ff or 8192)}))
+        if experts:
+            share = 0.6 * per_group / experts
+            for e in range(experts):
+                ops.append(SimOp(f"moe_ffn[{g}].expert{e}", "compute",
+                                 share / (chip_flops * mfu), flops=share))
+        else:
+            ops.append(SimOp(f"ffn_matmul[{g}]", "compute",
+                             0.6 * per_group / (chip_flops * mfu),
+                             flops=0.6 * per_group,
+                             meta={"shape": (8192, cfg.d_ff or 8192)}))
         ops.append(SimOp(f"allreduce[{g}]", "comm",
                          comm_bytes / link_bw, bytes=comm_bytes, group="dp"))
     ops.append(SimOp("optimizer.update", "compute",
                      0.02 * step_flops / (chip_flops * mfu),
                      flops=0.02 * step_flops))
     return ops
-
-
-# ----------------------------------------------------------------------- #
-# Injections
-# ----------------------------------------------------------------------- #
-@dataclass(frozen=True)
-class Injection:
-    kind: str
-    # gc | sync_after_comm | straggler | network_jitter | hang |
-    # slow_dataloader | minority_kernels | slow_compute | pyapi_stall
-    start_step: int = 0
-    ranks: tuple = ()              # affected ranks (empty = all)
-    factor: float = 1.0            # slowdown multiplier
-    duration: float = 0.0          # injected span length (gc/pyapi/dataloader)
-    period_ops: int = 6            # one injection every N ops (gc/pyapi)
-    op_match: str = ""             # substring matched against op names
-    api_name: str = "gc.collect"   # emitted event name (pyapi_stall)
-    at_step: int = 1               # hang step
-    at_op: int = -1                # hang op index (-1 = first comm)
-    meta: dict = field(default_factory=dict)
-
-    def hits_rank(self, r: int) -> bool:
-        return not self.ranks or r in self.ranks
 
 
 @dataclass
@@ -118,7 +117,9 @@ class ClusterSimulator:
         self.program = program
         self.rng = np.random.default_rng(seed)
         self.queue_depth = queue_depth
-        self.injections = list(injections or [])
+        self._injectors = resolve_injections(injections)
+        self.injections = [h.inj for h in self._injectors
+                           if h.inj is not None]
         self.ring_total_steps = ring_total_steps or 2 * (num_ranks - 1)
         self.hang: Optional[HangSnapshot] = None
 
@@ -127,19 +128,23 @@ class ClusterSimulator:
         """Legacy per-event view; delegates to the columnar fast path."""
         return self.run_batch(num_steps).to_events_by_rank()
 
-    def _hit_ranks(self, inj: Injection) -> np.ndarray:
+    def hit_ranks(self, inj: Injection) -> np.ndarray:
+        """The rank-index vector an injection targets (empty = all) —
+        deduped/bounded, the way the legacy emitter membership-tested."""
         if not inj.ranks:
             return np.arange(self.n)
-        # dedupe: the legacy emitter membership-tested each rank once
         return np.asarray(sorted({r for r in inj.ranks if 0 <= r < self.n}),
                           np.int64)
 
+    _hit_ranks = hit_ranks          # pre-registry spelling (back-compat)
+
     def run_batch(self, num_steps: int) -> EventBatch:
         """Emit the trace as an ``EventBatch``: whole rank-vectors per op,
-        no per-rank Python loops.  The RNG draw sequence is identical to
-        the historical per-event emitter (vector draws consume the same
-        PCG64 stream as the scalar draws they replace), so timestamps —
-        and therefore every diagnosis — are bit-for-bit unchanged."""
+        no per-rank Python loops.  Injector hooks run in injection-list
+        order at every hook point, and vector draws consume the same
+        PCG64 stream as the scalar draws they replaced — so for the
+        legacy kinds, timestamps (and therefore every diagnosis) are
+        bit-for-bit identical to the historical inline emitter."""
         n = self.n
         all_ranks = np.arange(n)
         b = EventBatchBuilder()
@@ -155,21 +160,9 @@ class ClusterSimulator:
                 if inj_hang is not None:
                     self._finalize_hang(b, step, oi, op, inj_hang, cpu, gpu)
                     return b.build()
-                # ---- host-side pre-op stalls (GC / unnecessary sync) ---- #
-                for inj in self.injections:
-                    if step < inj.start_step:
-                        continue
-                    if inj.kind in ("gc", "pyapi_stall") and \
-                            (oi % max(inj.period_ops, 1)
-                             == hash((step, inj.kind)) % max(inj.period_ops, 1)):
-                        hit = self._hit_ranks(inj)
-                        t0 = cpu[hit].copy()
-                        cpu[hit] += inj.duration * \
-                            (0.75 + 0.5 * self.rng.random(hit.size))
-                        b.append_block(
-                            EventKind.GC if inj.kind == "gc"
-                            else EventKind.PY_API,
-                            inj.api_name, hit, t0, t0, cpu[hit], step)
+                # ---- host-side pre-op stalls (GC / sync / storms) ------ #
+                for h in self._injectors:
+                    h.pre_op(self, b, step, oi, op, cpu)
                 # ---- issue-queue bound (CPU can't run ahead forever) --- #
                 cpu = np.maximum(cpu, ring[:, qi % ring.shape[1]])
                 # ---- per-op host overhead ------------------------------ #
@@ -214,17 +207,10 @@ class ClusterSimulator:
                         issue, start, end, step,
                         nbytes=op.bytes, group=op.group,
                         extra=op.meta or None)
-                # ---- sync-after-comm injection (Case-1) ---------------- #
+                # ---- post-collective host behavior (Case-1 sync) ------- #
                 if op.kind == "comm":
-                    for inj in self.injections:
-                        if (inj.kind == "sync_after_comm"
-                                and step >= inj.start_step):
-                            hit = self._hit_ranks(inj)
-                            t0 = cpu[hit].copy()
-                            cpu[hit] = np.maximum(cpu[hit], end[hit])
-                            b.append_block(
-                                EventKind.SYNC, "jax@block_until_ready",
-                                hit, t0, t0, cpu[hit], step)
+                    for h in self._injectors:
+                        h.post_comm(self, b, step, op, cpu, end)
             # ---- step event per rank ------------------------------------ #
             step_end = np.maximum(cpu, gpu)
             b.append_block(EventKind.STEP, f"step_{step}", all_ranks,
@@ -242,45 +228,27 @@ class ClusterSimulator:
 
     def _cpu_duration(self, op: SimOp, step: int) -> np.ndarray:
         dur = np.full(self.n, op.duration)
-        for inj in self.injections:
-            if inj.kind == "slow_dataloader" and step >= inj.start_step \
-                    and "dataloader" in op.name:
-                dur = dur * inj.factor + inj.duration
+        for h in self._injectors:
+            dur = h.cpu_duration(self, op, step, dur)
         return dur * (0.9 + 0.2 * self.rng.random(self.n))
 
     def _device_duration(self, op: SimOp, step: int) -> np.ndarray:
         dur = np.full(self.n, op.duration)
-        for inj in self.injections:
-            if step < inj.start_step:
-                continue
-            if inj.kind in ("straggler", "underclock") and op.kind == "compute":
-                for r in inj.ranks:
-                    if 0 <= r < self.n:
-                        dur[r] *= inj.factor
-            elif inj.kind == "slow_compute" and op.kind == "compute" \
-                    and inj.op_match in op.name:
-                dur *= inj.factor
-            elif inj.kind == "network_jitter" and op.kind == "comm":
-                dur *= inj.factor * (0.8 + 0.4 * self.rng.random(self.n))
+        for h in self._injectors:
+            dur = h.device_duration(self, op, step, dur)
         return dur * (0.98 + 0.04 * self.rng.random(self.n))
 
     def _minority_time(self, op: SimOp, step: int) -> np.ndarray:
         extra = np.zeros(self.n)
-        for inj in self.injections:
-            if inj.kind == "minority_kernels" and step >= inj.start_step \
-                    and op.kind == "compute":
-                extra += op.duration * inj.factor
+        for h in self._injectors:
+            extra = h.minority_time(self, op, step, extra)
         return extra
 
     # ------------------------------------------------------------------ #
     def _hang_at(self, step: int, oi: int, op: SimOp) -> Optional[Injection]:
-        for inj in self.injections:
-            if inj.kind != "hang" or step != inj.at_step:
-                continue
-            if inj.at_op == oi:
-                return inj
-            if inj.at_op == -1 and op.kind == "comm":
-                return inj
+        for h in self._injectors:
+            if h.hang_at(self, step, oi, op):
+                return h.inj
         return None
 
     def _finalize_hang(self, b: EventBatchBuilder, step, oi, op, inj,

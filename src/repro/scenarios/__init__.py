@@ -1,0 +1,20 @@
+"""Scenario matrix: labelled fault cases scored against the detectors.
+
+``SCENARIOS`` is the library (legacy paper cases + L4 production faults,
+each with machine-readable ground truth); ``run_matrix``/``score_matrix``
+sweep them over model-zoo configs and fold results into per-detector
+precision/recall.  ``benchmarks/scenarios.py`` is the CI entry point.
+"""
+from repro.scenarios.base import (GroundTruth, Scenario,  # noqa: F401
+                                  anomaly_key)
+from repro.scenarios.library import (FAULT_KINDS, SCENARIOS,  # noqa: F401
+                                     SCENARIOS_BY_NAME, scenarios_for)
+from repro.scenarios.runner import (DEFAULT_NUM_RANKS, CellResult,  # noqa: F401
+                                    run_cell, run_matrix, score_matrix)
+
+__all__ = [
+    "GroundTruth", "Scenario", "anomaly_key",
+    "SCENARIOS", "SCENARIOS_BY_NAME", "FAULT_KINDS", "scenarios_for",
+    "CellResult", "run_cell", "run_matrix", "score_matrix",
+    "DEFAULT_NUM_RANKS",
+]

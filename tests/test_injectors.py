@@ -1,0 +1,252 @@
+"""Fault-injector plugin layer: frozen-oracle byte-equivalence of the
+legacy kinds, registry semantics, custom injectors end-to-end, and
+cross-process trace reproducibility (the ``hash()`` phase fix).
+
+The digests pin the exact EventBatch every legacy ``Injection.kind``
+emits on the 16-rank llama-20b program (all nine kinds verified
+byte-identical to the pre-registry monolithic emitter at refactor time —
+except ``gc``/``pyapi_stall``, whose periodic-stall phase intentionally
+moved from salted ``hash((step, kind))`` to CRC32 so the same seed
+reproduces the same trace in every process).  Any simulator or injector
+edit that shifts one RNG draw changes a digest and fails loudly here.
+"""
+import hashlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.injectors import (DuplicateInjectorError, FaultInjector,
+                                  Injection, UnknownInjectorError,
+                                  get_injector, injector_names,
+                                  register_injector, resolve_injections,
+                                  stall_phase, unregister_injector)
+from repro.core.timeline import ClusterSimulator, program_from_config
+
+N, STEPS, SEED = 16, 4, 7
+
+
+def batch_digest(batch) -> str:
+    h = hashlib.sha256()
+    for col in (batch.kind, batch.name_id, batch.rank, batch.issue_ts,
+                batch.start_ts, batch.end_ts, batch.step, batch.flops,
+                batch.nbytes):
+        h.update(np.ascontiguousarray(col).tobytes())
+    h.update("\x00".join(batch.names).encode())
+    h.update(repr(sorted((int(k), sorted(v.items())) for k, v in
+                         batch.extra.items())).encode())
+    return h.hexdigest()[:16]
+
+
+LEGACY_CASES = {
+    "healthy": [],
+    "gc": [Injection(kind="gc", duration=0.02, period_ops=5)],
+    "pyapi_stall": [Injection(kind="pyapi_stall", duration=0.03,
+                              period_ops=7,
+                              api_name="importlib.metadata.version")],
+    "sync_after_comm": [Injection(kind="sync_after_comm")],
+    "straggler": [Injection(kind="straggler", ranks=(3, 7), factor=2.0,
+                            start_step=2)],
+    "underclock": [Injection(kind="underclock", ranks=(5,), factor=2.5,
+                             start_step=3)],
+    "slow_compute": [Injection(kind="slow_compute", op_match="ffn_matmul",
+                               factor=2.88)],
+    "slow_dataloader": [Injection(kind="slow_dataloader", factor=1.0,
+                                  duration=2.0)],
+    "network_jitter": [Injection(kind="network_jitter", factor=3.0,
+                                 start_step=3)],
+    "minority_kernels": [Injection(kind="minority_kernels", factor=0.35)],
+    "hang": [Injection(kind="hang", ranks=(11,), at_step=2)],
+    "combo": [Injection(kind="gc", duration=0.02, period_ops=5),
+              Injection(kind="underclock", ranks=(5,), factor=2.5,
+                        start_step=3),
+              Injection(kind="network_jitter", factor=3.0, start_step=3)],
+}
+
+ORACLE = {
+    "healthy": "5c9ff3291a34cb53",
+    "gc": "e6367f43e80ead7e",
+    "pyapi_stall": "e566d55db7d0e8b0",
+    "sync_after_comm": "e1529f484b102c66",
+    "straggler": "e921200023f52fc7",
+    "underclock": "b7afb32d51eef4d5",
+    "slow_compute": "d3d9790c187b83e7",
+    "slow_dataloader": "9e376f1460ebee42",
+    "network_jitter": "4ebe32959720dd13",
+    "minority_kernels": "7318eed41d71ff19",
+    "hang": "1d7e46fc1981699c",
+    "combo": "a19b62b9c14c8235",
+}
+
+
+@pytest.fixture(scope="module")
+def prog():
+    return program_from_config(get_config("llama-20b-paper"), num_chips=N)
+
+
+@pytest.mark.parametrize("case", sorted(LEGACY_CASES))
+def test_legacy_kind_byte_equivalent(prog, case):
+    sim = ClusterSimulator(N, prog, seed=SEED,
+                           injections=LEGACY_CASES[case])
+    assert batch_digest(sim.run_batch(STEPS)) == ORACLE[case], \
+        f"trace for {case!r} drifted from the frozen oracle"
+
+
+def test_hang_state_preserved(prog):
+    sim = ClusterSimulator(N, prog, seed=SEED,
+                           injections=LEGACY_CASES["hang"])
+    sim.run_batch(STEPS)
+    assert sim.hang is not None and 11 in sim.hang.stacks
+
+
+# --------------------------------------------------------------------- #
+# registry semantics
+# --------------------------------------------------------------------- #
+def test_all_kinds_registered():
+    names = injector_names()
+    for kind in ("gc", "pyapi_stall", "sync_after_comm", "straggler",
+                 "underclock", "slow_compute", "network_jitter",
+                 "slow_dataloader", "minority_kernels", "hang",
+                 "checkpoint_write_storm", "ecc_throttle", "network_flap",
+                 "moe_straggler", "serving_interference"):
+        assert kind in names
+
+
+def test_unknown_kind_is_loud(prog):
+    with pytest.raises(UnknownInjectorError) as ei:
+        ClusterSimulator(N, prog, injections=[Injection(kind="nope")])
+    assert "nope" in str(ei.value) and "gc" in str(ei.value)
+
+
+def test_duplicate_registration_refused():
+    with pytest.raises(DuplicateInjectorError):
+        @register_injector
+        class Dup(FaultInjector):  # noqa: F811
+            name = "gc"
+
+
+def test_replace_and_restore():
+    original = get_injector("gc")
+
+    @register_injector(replace=True)
+    class Quiet(FaultInjector):
+        name = "gc"
+
+    try:
+        assert get_injector("gc") is Quiet
+    finally:
+        register_injector(original, replace=True)
+    assert get_injector("gc") is original
+
+
+def test_unnamed_injector_rejected():
+    with pytest.raises(Exception, match="name"):
+        @register_injector
+        class NoName(FaultInjector):
+            pass
+
+
+def test_resolve_rejects_garbage():
+    with pytest.raises(Exception, match="neither"):
+        resolve_injections(["gc"])
+
+
+# --------------------------------------------------------------------- #
+# custom injectors end-to-end
+# --------------------------------------------------------------------- #
+def test_custom_injector_via_registry(prog):
+    @register_injector
+    class DoubleCompute(FaultInjector):
+        name = "test_double_compute"
+
+        def device_duration(self, sim, op, step, dur):
+            if op.kind == "compute":
+                return dur * 2.0
+            return dur
+
+    try:
+        base = ClusterSimulator(N, prog, seed=SEED).run_batch(2)
+        sim = ClusterSimulator(
+            N, prog, seed=SEED,
+            injections=[Injection(kind="test_double_compute")])
+        slow = sim.run_batch(2)
+        assert slow.end_ts.max() > base.end_ts.max() * 1.3
+    finally:
+        unregister_injector("test_double_compute")
+    with pytest.raises(UnknownInjectorError):
+        get_injector("test_double_compute")
+
+
+def test_injector_instance_without_registration(prog):
+    """resolve_injections accepts pre-built FaultInjector instances —
+    one-off faults need no registry entry."""
+    class OneOff(FaultInjector):
+        def __init__(self):
+            super().__init__(Injection(kind="one_off"))
+
+        def cpu_duration(self, sim, op, step, dur):
+            return dur + 5.0
+
+    base = ClusterSimulator(N, prog, seed=SEED).run_batch(2)
+    sim = ClusterSimulator(N, prog, seed=SEED, injections=[OneOff()])
+    assert sim.run_batch(2).end_ts.max() > base.end_ts.max() + 5.0
+
+
+def test_noop_injector_is_byte_invisible(prog):
+    """An injector that overrides nothing must not perturb the trace —
+    hooks run before the noise draws, consuming no RNG."""
+    class Noop(FaultInjector):
+        def __init__(self):
+            super().__init__(Injection(kind="noop"))
+
+    sim = ClusterSimulator(N, prog, seed=SEED, injections=[Noop()])
+    assert batch_digest(sim.run_batch(STEPS)) == ORACLE["healthy"]
+
+
+# --------------------------------------------------------------------- #
+# cross-process reproducibility (the hash() phase fix)
+# --------------------------------------------------------------------- #
+def test_stall_phase_deterministic():
+    assert stall_phase(3, "gc", 5) == stall_phase(3, "gc", 5)
+    assert stall_phase(0, "gc", 0) == 0   # period 0 must not divide by 0
+    phases = {stall_phase(s, "gc", 7) for s in range(20)}
+    assert len(phases) > 1, "phase must vary across steps"
+
+
+_SUBPROC = """
+import sys
+sys.path.insert(0, {src!r})
+from tests.test_injectors import LEGACY_CASES, batch_digest
+from repro.configs import get_config
+from repro.core.timeline import ClusterSimulator, program_from_config
+prog = program_from_config(get_config("llama-20b-paper"), num_chips={n})
+for case in ("gc", "pyapi_stall"):
+    sim = ClusterSimulator({n}, prog, seed={seed},
+                           injections=LEGACY_CASES[case])
+    print(case, batch_digest(sim.run_batch({steps})))
+"""
+
+
+def test_gc_trace_stable_across_hash_seeds(tmp_path):
+    """The legacy ``hash((step, kind))`` phase made gc/pyapi traces differ
+    between processes with different PYTHONHASHSEED — the exact bug the
+    CRC32 phase fixes.  Two subprocesses with adversarial hash seeds must
+    emit identical traces (and match this process's oracle)."""
+    import os
+    import pathlib
+    root = str(pathlib.Path(__file__).resolve().parent.parent)
+    code = _SUBPROC.format(src=root, n=N, seed=SEED, steps=STEPS)
+    outs = []
+    for hash_seed in ("0", "424242"):
+        env = dict(os.environ, PYTHONHASHSEED=hash_seed,
+                   PYTHONPATH=os.pathsep.join(
+                       [os.path.join(root, "src"), root]))
+        r = subprocess.run([sys.executable, "-c", code], env=env,
+                           capture_output=True, text=True, timeout=120)
+        assert r.returncode == 0, r.stderr
+        outs.append(r.stdout)
+    assert outs[0] == outs[1]
+    assert f"gc {ORACLE['gc']}" in outs[0]
+    assert f"pyapi_stall {ORACLE['pyapi_stall']}" in outs[0]

@@ -1,0 +1,175 @@
+"""Scenario library + matrix scorer: library invariants, grading
+semantics on synthetic anomalies, scorer math on synthetic cells, and a
+few real cells on the smallest config (the full sweep is CI's
+``benchmarks.scenarios --quick``)."""
+import pytest
+
+from repro.core.anomaly import Anomaly, Team
+from repro.scenarios import (FAULT_KINDS, SCENARIOS, SCENARIOS_BY_NAME,
+                             CellResult, anomaly_key, run_cell,
+                             score_matrix, scenarios_for)
+from repro.scenarios.runner import _grade
+
+
+# --------------------------------------------------------------------- #
+# library invariants
+# --------------------------------------------------------------------- #
+def test_taxonomy_breadth():
+    assert len(FAULT_KINDS) >= 8, FAULT_KINDS
+    assert len(SCENARIOS) >= 12
+    assert any(s.healthy for s in SCENARIOS)
+    assert sum("l4" in s.tags for s in SCENARIOS) >= 5
+
+
+def test_every_fault_scenario_is_labelled():
+    for s in SCENARIOS:
+        if s.healthy:
+            continue
+        assert s.truth.expect, s.name
+        assert s.truth.team in ("operations", "algorithm",
+                                "infrastructure"), s.name
+        for k in s.truth.expect + s.truth.allowed:
+            assert ":" in k, (s.name, k)
+        assert s.inject(1.0, 32), s.name
+
+
+def test_injections_scale_with_step_time():
+    gc = SCENARIOS_BY_NAME["gc_stall"]
+    small = gc.inject(0.3, 32)[0].duration
+    large = gc.inject(30.0, 32)[0].duration
+    assert large == pytest.approx(100 * small)
+
+
+def test_moe_scenario_gated_by_family():
+    class Cfg:
+        family = "llama"
+    class Moe:
+        family = "moe"
+    names = {s.name for s in scenarios_for(Cfg())}
+    assert "moe_straggler" not in names
+    assert "moe_straggler" in {s.name for s in scenarios_for(Moe())}
+    assert "healthy" in names
+
+
+# --------------------------------------------------------------------- #
+# grading semantics (synthetic anomalies — no simulation)
+# --------------------------------------------------------------------- #
+def _anom(kind, metric, team, step=5, ranks=()):
+    return Anomaly(kind=kind, metric=metric, team=Team(team),
+                   root_cause="x", step=step, ranks=list(ranks))
+
+
+def test_grade_catch():
+    scn = SCENARIOS_BY_NAME["gpu_underclock"]   # expects fail_slow tput @5
+    a = _anom("fail_slow", "throughput", "operations", step=4, ranks=(5,))
+    c = _grade(scn, "cfg", [a])
+    assert c.ok and c.caught and c.first_step == 4
+    assert anomaly_key(a) in c.fired
+
+
+def test_grade_miss_and_false_positive():
+    scn = SCENARIOS_BY_NAME["gpu_underclock"]
+    c = _grade(scn, "cfg", [_anom("regression", "flops", "infrastructure")])
+    assert not c.ok and not c.caught
+    assert c.false_keys == ("regression:flops",)
+
+
+def test_grade_wrong_team_and_ranks():
+    scn = SCENARIOS_BY_NAME["gpu_underclock"]
+    wrong_team = _anom("fail_slow", "throughput", "algorithm",
+                       step=4, ranks=(5,))
+    assert not _grade(scn, "cfg", [wrong_team]).team_ok
+    wrong_rank = _anom("fail_slow", "throughput", "operations",
+                       step=4, ranks=(9,))
+    assert not _grade(scn, "cfg", [wrong_rank]).ranks_ok
+
+
+def test_grade_onset_violation():
+    scn = SCENARIOS_BY_NAME["gpu_underclock"]   # onset_step=3
+    early = _anom("fail_slow", "throughput", "operations",
+                  step=1, ranks=(5,))
+    assert not _grade(scn, "cfg", [early]).onset_ok
+    # hang anomalies carry step=-1: never an onset violation
+    scn_h = SCENARIOS_BY_NAME["comm_hang"]
+    h = _anom("hang", "intra_kernel_inspecting", "operations",
+              step=-1, ranks=(11,))
+    assert _grade(scn_h, "cfg", [h]).ok
+
+
+def test_grade_allowed_secondary_not_penalized():
+    scn = SCENARIOS_BY_NAME["checkpoint_write_storm"]
+    a = [_anom("regression", "issue_latency", "infrastructure", step=3),
+         _anom("fail_slow", "throughput", "operations", step=4)]
+    c = _grade(scn, "cfg", a)
+    assert c.ok and c.false_keys == ()
+
+
+def test_grade_healthy_any_firing_is_false():
+    scn = SCENARIOS_BY_NAME["healthy"]
+    assert _grade(scn, "cfg", []).ok
+    c = _grade(scn, "cfg", [_anom("regression", "flops", "infrastructure")])
+    assert not c.ok and c.false_keys == ("regression:flops",)
+
+
+# --------------------------------------------------------------------- #
+# scorer math (synthetic cells)
+# --------------------------------------------------------------------- #
+def _cell(scenario, healthy=False, fired=(), false_keys=(), caught=True,
+          team_ok=True, ranks_ok=True, onset_ok=True, anomalies=0):
+    return CellResult(scenario=scenario, config="cfg", healthy=healthy,
+                      fired=tuple(fired), false_keys=tuple(false_keys),
+                      caught=caught, team_ok=team_ok, ranks_ok=ranks_ok,
+                      onset_ok=onset_ok, first_step=-1, anomalies=anomalies)
+
+
+def test_score_matrix_counts():
+    cells = [
+        _cell("gpu_underclock", fired=("fail_slow:throughput",),
+              anomalies=1),                                    # TP
+        _cell("ecc_throttle", fired=("regression:flops",),
+              false_keys=("regression:flops",), caught=False,
+              anomalies=1),                                    # FN + FP
+        _cell("healthy", healthy=True, fired=("regression:v_inter",),
+              false_keys=("regression:v_inter",), anomalies=1),  # FP
+    ]
+    s = score_matrix(cells)
+    tput = s["detectors"]["fail_slow:throughput"]
+    assert tput["tp"] == 1 and tput["fn"] == 1      # FN charged to expect[0]
+    assert tput["recall"] == 0.5
+    assert s["detectors"]["regression:flops"]["fp"] == 1
+    assert s["detectors"]["regression:v_inter"]["fp"] == 1
+    assert s["missed"] == ["ecc_throttle@cfg"]
+    assert s["false_positive_cells"] == sorted(
+        {"ecc_throttle@cfg", "healthy@cfg"})
+    assert s["micro_recall"] == 0.5
+    assert s["micro_precision"] == pytest.approx(1 / 3)
+
+
+def test_score_matrix_perfect():
+    cells = [_cell("gpu_underclock", fired=("fail_slow:throughput",),
+                   anomalies=1),
+             _cell("healthy", healthy=True)]
+    s = score_matrix(cells)
+    assert s["micro_precision"] == 1.0 and s["micro_recall"] == 1.0
+    assert not s["missed"] and not s["misrouted"]
+
+
+def test_score_matrix_misrouted():
+    cells = [_cell("gpu_underclock", fired=("fail_slow:throughput",),
+                   team_ok=False, anomalies=1)]
+    assert score_matrix(cells)["misrouted"] == ["gpu_underclock@cfg"]
+
+
+# --------------------------------------------------------------------- #
+# real cells on the smallest config (sanity, not the full sweep)
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("name", ["healthy", "gc_stall", "ecc_throttle",
+                                  "comm_hang"])
+def test_real_cell(name):
+    c = run_cell(SCENARIOS_BY_NAME[name], "qwen2-0.5b")
+    assert c.ok, (name, c)
+
+
+def test_moe_straggler_cell():
+    c = run_cell(SCENARIOS_BY_NAME["moe_straggler"], "dbrx-132b")
+    assert c.ok and "regression:flops" in c.fired
