@@ -36,8 +36,23 @@ def main():
 
         from repro import store
         from repro.core.columnar import EventBatch
-        fcs_bytes = store.write_trace(EventBatch.from_events(events),
-                                      os.path.join(d, "flare.fcs"))
+        batch = EventBatch.from_events(events)
+        fcs_bytes = store.write_trace(batch, os.path.join(d, "flare.fcs"))
+
+        # archival formats compared at archival granularity: one segment
+        # per step of a multi-rank run (the daemon-drain / rotation
+        # shape), not the single-rank single-step sliver above — the
+        # fixed-size v3 stats block amortizes over a real segment
+        b8 = ClusterSimulator(8, prog, seed=0).run_batch(2)
+        order, uniq, bounds = b8.step_index()
+        fcs2_bytes = fcs3_bytes = 0
+        for i in range(uniq.size):
+            sb = b8.take(order[bounds[i]:bounds[i + 1]])
+            fcs2_bytes += store.write_fcs(sb, os.path.join(d, "a.fcs2"),
+                                          version=2)
+            fcs3_bytes += store.write_fcs(sb, os.path.join(d, "a.fcs3"),
+                                          version=3)
+        n8 = len(b8)
 
         full_path = os.path.join(d, "full.jsonl")
         full_bytes = 0
@@ -59,6 +74,17 @@ def main():
     emit("logsize/flare_fcs_MB_per_step", fcs_bytes / 1e6 * 1e6,
          f"MB={fcs_bytes / 1e6:.3f};"
          f"ratio={fcs_bytes / max(flare_bytes, 1):.3f}x_of_jsonl")
+    emit("logsize/flare_fcs2_B_per_event", fcs2_bytes / max(n8, 1),
+         f"B_per_event={fcs2_bytes / max(n8, 1):.1f};segments={uniq.size}")
+    # v3 = v2 + the 272-byte stats block per segment; the whole point of
+    # the stats directory is that pruning is ~free at rest
+    v3_overhead = fcs3_bytes / max(fcs2_bytes, 1)
+    assert v3_overhead <= 1.05, (
+        f"FCS v3 stats-directory overhead {v3_overhead:.3f}x over v2 "
+        "exceeds the 1.05x budget")
+    emit("logsize/flare_fcs3_B_per_event", fcs3_bytes / max(n8, 1),
+         f"B_per_event={fcs3_bytes / max(n8, 1):.1f};"
+         f"stats_overhead={v3_overhead:.4f}x_of_v2(max1.05)")
     emit("logsize/full_profiler_MB_per_step", full_bytes / 1e6 * 1e6,
          f"MB={full_bytes / 1e6:.1f};ratio={ratio:.0f}x;paper~7000x")
     return flare_bytes, full_bytes

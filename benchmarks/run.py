@@ -12,6 +12,8 @@ Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/_util.emit).
              BENCH_storage.json)
   §Robust -> scenarios (fault matrix, scored detector P/R;
              BENCH_scenarios.json)
+  §Query  -> archive (predicate-pushdown reads + rollup cache;
+             BENCH_archive.json)
 """
 from __future__ import annotations
 
@@ -20,9 +22,9 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (case2_matmul, fleet, hang, ingest, issue_dist,
-                            logsize, overhead, regression, roofline,
-                            scenarios, storage, vminority)
+    from benchmarks import (archive, case2_matmul, fleet, hang, ingest,
+                            issue_dist, logsize, overhead, regression,
+                            roofline, scenarios, storage, vminority)
     sections = [
         ("fig8_overhead", overhead.main),
         ("fig9_logsize", logsize.main),
@@ -36,6 +38,7 @@ def main() -> None:
         ("scale_fleet", fleet.main),
         ("scale_storage", storage.main),
         ("robust_scenarios", scenarios.main),
+        ("query_archive", archive.main),
     ]
     print("name,us_per_call,derived")
     failures = []

@@ -1,0 +1,18 @@
+"""Queryable trace archive: the serving surface over recorded fleets.
+
+::
+
+    from repro.archive import TraceArchive
+
+    ar = TraceArchive("logs/", history=history)
+    batch = ar.query_events("job-b", step_range=(40, 60))     # pushdown
+    curve = ar.query_metrics("job-b", metric="throughput")    # cached
+    crit  = ar.query_anomalies(team="infrastructure")
+    print(format_fleet_weather(ar.fleet_weather()))
+
+See ``src/repro/archive/README.md`` for the full API reference.
+"""
+from repro.archive.archive import (SCALAR_METRICS, TraceArchive,
+                                   format_fleet_weather)
+
+__all__ = ["TraceArchive", "format_fleet_weather", "SCALAR_METRICS"]

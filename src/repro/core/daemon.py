@@ -29,6 +29,7 @@ from typing import Any, Callable, Optional
 from repro.core.events import EventKind, EventRingBuffer, TraceEvent
 from repro.core.interceptor import PyApiInterceptor
 from repro.core.stack import reconstruct_stacks
+from repro.core.telemetry import TelemetryRegistry
 
 _GLOBAL_DAEMON: Optional["TracingDaemon"] = None
 
@@ -62,6 +63,10 @@ class DaemonConfig:
     # / DetectorSpecs — see repro.core.detectors); None = default set
     detectors: Optional[list] = None
     num_ranks: int = 1             # job-wide rank count for that engine
+    # self-telemetry registry (repro.core.telemetry); None = a private
+    # one per daemon.  Pass a shared registry (or attach to a fleet,
+    # whose snapshot merges daemon registries) for one pipeline view.
+    telemetry: Optional[TelemetryRegistry] = None
 
 
 class TracingDaemon:
@@ -80,9 +85,18 @@ class TracingDaemon:
         self._last_completion = time.perf_counter()
         self._pending: "queue.Queue" = queue.Queue()
         self._last_stack: list[str] = []
-        self.bytes_logged = 0
-        self.events_emitted = 0
-        self.spill_errors = 0
+        # self-telemetry: handles resolved once, incremented lock-free on
+        # the hot path (these replace the old plain-int attributes; the
+        # read-only properties below keep that surface)
+        self.telemetry = self.cfg.telemetry or TelemetryRegistry()
+        self._c_bytes = self.telemetry.counter("daemon.bytes_logged")
+        self._c_events = self.telemetry.counter("daemon.events_emitted")
+        self._c_spill_errors = self.telemetry.counter("daemon.spill_errors")
+        self._g_heartbeat = self.telemetry.gauge("daemon.heartbeat_age_s")
+        self._g_queue = self.telemetry.gauge("daemon.queue_depth")
+        self._g_rate = self.telemetry.gauge("daemon.events_per_s")
+        self._rate_t0 = time.perf_counter()
+        self._rate_n0 = 0
         self._attached = False
         self._spill = None
         if self.cfg.log_path:
@@ -178,9 +192,22 @@ class TracingDaemon:
     # ------------------------------------------------------------------ #
     # event entry points
     # ------------------------------------------------------------------ #
+    # telemetry-backed views of the historical plain-int attributes
+    @property
+    def bytes_logged(self) -> int:
+        return self._c_bytes.value
+
+    @property
+    def events_emitted(self) -> int:
+        return self._c_events.value
+
+    @property
+    def spill_errors(self) -> int:
+        return self._c_spill_errors.value
+
     def _emit(self, ev: TraceEvent):
         self.buffer.append(ev)
-        self.events_emitted += 1
+        self._c_events.inc()
         self._last_completion = time.perf_counter()
 
     def _on_api_span(self, name: str, t0: float, t1: float):
@@ -291,10 +318,9 @@ class TracingDaemon:
                 # silently end hang-heartbeat detection too.  Counted and
                 # warned once so a permanently failing spill is observable.
                 try:
-                    self.bytes_logged += self._spill.write(batch)
+                    self._c_bytes.inc(self._spill.write(batch))
                 except Exception as e:
-                    self.spill_errors += 1
-                    if self.spill_errors == 1:
+                    if self._c_spill_errors.inc() == 1:
                         import warnings
                         warnings.warn(
                             f"trace spill to {self.cfg.log_path} failing "
@@ -310,6 +336,13 @@ class TracingDaemon:
     def _heartbeat(self):
         now = time.perf_counter()
         silent = now - self._last_completion
+        self._g_heartbeat.set(silent)
+        self._g_queue.set(self._pending.qsize())
+        dt = now - self._rate_t0
+        if dt >= 1.0:
+            n = self._c_events.value
+            self._g_rate.set((n - self._rate_n0) / dt)
+            self._rate_t0, self._rate_n0 = now, n
         if self._in_step and silent > self.cfg.hang_timeout:
             report = {"rank": self.cfg.rank, "silent_s": silent,
                       "step": self._step, "stack": self._last_stack}

@@ -47,6 +47,7 @@ from repro.core.detectors.fleet import FleetContext
 from repro.core.detectors.registry import resolve_detectors
 from repro.core.engine import DiagnosticEngine, EngineConfig, Team
 from repro.core.history import HistoryStore
+from repro.core.telemetry import Counter, Gauge, TelemetryRegistry
 from repro.fleet.store import SharedInterner, StepPartitionedStore
 from repro.fleet.stream import AnomalyStream, FleetAnomaly
 
@@ -61,6 +62,9 @@ class FleetConfig:
     fleet_detectors: Optional[list] = None
     # job_id -> {"rack": ..., "switch": ...}; extend live via set_topology
     topology: Optional[dict[str, dict]] = None
+    # self-telemetry registry; None = a private one per multiplexer.
+    # ``telemetry_snapshot()`` merges attached daemons' registries in.
+    telemetry: Optional[TelemetryRegistry] = None
 
 
 @dataclass
@@ -68,7 +72,12 @@ class FleetJob:
     job_id: str
     store: StepPartitionedStore
     engine: DiagnosticEngine
-    late_events: int = 0
+    # telemetry handles (fleet.late_rows{job=}, fleet.watermark_lag{job=},
+    # fleet.pending_steps{job=}) — created by add_job from the mux registry
+    late_rows: Optional[Counter] = None
+    watermark_lag: Optional[Gauge] = None
+    pending_depth: Optional[Gauge] = None
+    last_closed: int = -1
     hang_reported: bool = False
     daemon: object = None
     anomaly_count: int = 0
@@ -87,6 +96,12 @@ class FleetJob:
             self.anomaly_count += n
 
     @property
+    def late_events(self) -> int:
+        """Rows that arrived for an already-diagnosed step (historical
+        name; the series is ``fleet.late_rows{job=...}``)."""
+        return self.late_rows.value if self.late_rows is not None else 0
+
+    @property
     def evaluated(self) -> set:
         """Diagnosed steps — the engine's record is the single source of
         truth (it marks steps in ``evaluate_step_batch``)."""
@@ -99,6 +114,7 @@ class FleetMultiplexer:
         self.cfg = config or FleetConfig()
         self.history = history or HistoryStore()
         self.interner = SharedInterner()
+        self.telemetry = self.cfg.telemetry or TelemetryRegistry()
         self.stream = AnomalyStream(self.cfg.routes)
         # deep-copy the inner attr dicts: set_topology mutates them, and a
         # FleetConfig reused across multiplexers must stay pristine
@@ -136,7 +152,13 @@ class FleetMultiplexer:
             job = FleetJob(
                 job_id=job_id,
                 store=StepPartitionedStore(self.interner),
-                engine=DiagnosticEngine(cfg, self.history))
+                engine=DiagnosticEngine(cfg, self.history),
+                late_rows=self.telemetry.counter("fleet.late_rows",
+                                                 job=job_id),
+                watermark_lag=self.telemetry.gauge("fleet.watermark_lag",
+                                                   job=job_id),
+                pending_depth=self.telemetry.gauge("fleet.pending_steps",
+                                                   job=job_id))
             self._jobs[job_id] = job
             return job
 
@@ -188,7 +210,7 @@ class FleetMultiplexer:
             touched = job.store.append(batch)
             for s, nrows in touched.items():
                 if s in job.evaluated:
-                    job.late_events += nrows
+                    job.late_rows.inc(nrows)
                     job.store.drop_step(s)
             self._advance(job)
             self._maybe_hang(job)
@@ -211,10 +233,16 @@ class FleetMultiplexer:
             anoms = job.engine.evaluate_step_batch(
                 sb, s, num_ranks=self._job_ranks(job))
             ts = float(sb.end_ts.max()) if len(sb) else job.store.last_ts
+            job.last_closed = s
             for a in anoms:
                 self.stream.push(job.job_id, a, ts)
                 job.count_anomaly()
             self._observe_fleet(job.job_id, s, anoms, ts)
+        # watermark lag = steps seen but not yet closed; pending depth =
+        # step buckets currently held (the mux's "queue")
+        job.watermark_lag.set(max(job.store.max_step_seen - job.last_closed,
+                                  0))
+        job.pending_depth.set(len(job.store.pending_steps()))
 
     def defer_fleet_tier(self) -> None:
         """Buffer fleet-scope observations instead of running them.
@@ -338,6 +366,23 @@ class FleetMultiplexer:
             if job.daemon is not None:
                 job.daemon.stop()
         return self.finalize()
+
+    def telemetry_snapshot(self) -> dict:
+        """One JSON-ready snapshot of the whole pipeline's self-telemetry:
+        this multiplexer's registry (per-job late rows, watermark lag,
+        pending depth, plus whatever replay published) merged with every
+        attached daemon's registry, the latter re-tagged ``job=<id>`` so
+        per-daemon series stay distinguishable.  Daemons sharing the mux
+        registry (``DaemonConfig(telemetry=mux.telemetry)``) are already
+        in and are not double-counted."""
+        snap = self.telemetry.snapshot()
+        for job in self.jobs:
+            reg = getattr(job.daemon, "telemetry", None)
+            if reg is not None and reg is not self.telemetry:
+                snap = self.telemetry.merge_snapshot(
+                    reg.snapshot(), into=snap,
+                    extra_tags={"job": job.job_id})
+        return snap
 
     def stats(self) -> dict[str, dict]:
         out = {}

@@ -48,8 +48,8 @@ from dataclasses import dataclass, field
 from typing import Iterable, Iterator, Optional
 
 from repro.fleet.multiplexer import FleetMultiplexer
-from repro.store import (CodecError, codec_for_path, codecs,
-                         job_id_for_path, seg_index)
+from repro.store import (CodecError, Predicate, ScanStats, codec_for_path,
+                         codecs, job_id_for_path, seg_index)
 
 
 def _known_patterns() -> tuple[str, ...]:
@@ -114,6 +114,9 @@ class ReplayStats:
     skipped_lines: int = 0       # corrupt JSONL lines skipped
     corrupt_files: int = 0       # files with a CodecError (bad magic,
     #                              truncated FCS tail, unknown format)
+    skipped_segments: int = 0    # FCS v3 segments pruned on stats alone
+    bytes_decoded: int = 0       # segment bytes actually decoded (FCS)
+    bytes_skipped: int = 0       # segment bytes hopped over by pushdown
     seconds: float = 0.0
     job_workers: int = 1         # worker threads the replay actually used
     per_job: dict = field(default_factory=dict)   # job_id -> events
@@ -130,6 +133,9 @@ class ReplayStats:
         self.events += other.events
         self.skipped_lines += other.skipped_lines
         self.corrupt_files += other.corrupt_files
+        self.skipped_segments += other.skipped_segments
+        self.bytes_decoded += other.bytes_decoded
+        self.bytes_skipped += other.bytes_skipped
         for job_id, ev in other.per_job.items():
             self.per_job[job_id] = self.per_job.get(job_id, 0) + ev
 
@@ -144,14 +150,25 @@ class FleetReplayer:
     GIL-releasing numpy windows, serial otherwise; ``1`` = serial; an
     explicit ``N`` is always honored); ``prefetch`` bounds how many
     decoded chunks each job may queue ahead of its diagnosis (``0``
-    disables the pipeline and decodes inline)."""
+    disables the pipeline and decodes inline).
+
+    ``predicate`` (a :class:`repro.store.Predicate`) pushes segment
+    pruning into the decode: FCS v3 segments whose stats prove no row
+    can match are hopped over without inflating a slab (counted in
+    ``ReplayStats.skipped_segments`` / ``bytes_skipped``).  Pruning is
+    segment-granular — yielded segments still carry all their rows —
+    and v1/v2/JSONL inputs simply decode everything, so a predicate
+    never changes which FORMATS replay, only how much I/O v3 archives
+    pay.  Use it to re-diagnose a step/time window out of a months-long
+    archive without paying a full decode."""
 
     def __init__(self, mux: FleetMultiplexer, *, chunk_bytes: int = 8 << 20,
                  max_workers: Optional[int] = None,
                  executor: str = "thread",
                  serial_below: Optional[int] = None,
                  job_workers: Optional[int] = None,
-                 prefetch: int = 2):
+                 prefetch: int = 2,
+                 predicate: Optional[Predicate] = None):
         self.mux = mux
         self.chunk_bytes = chunk_bytes
         self.max_workers = max_workers
@@ -159,6 +176,7 @@ class FleetReplayer:
         self.serial_below = serial_below
         self.job_workers = job_workers
         self.prefetch = prefetch
+        self.predicate = predicate
 
     def _ingest_step_aligned(self, job_id: str, batch) -> None:
         """Feed one decoded chunk as per-step slices in step order, so a
@@ -194,11 +212,13 @@ class FleetReplayer:
         counted on ``stats`` instead of raising."""
         codec = codec_for_path(path)
         events = skipped = 0
+        scan = ScanStats()
         try:
             chunks = codec.iter_chunks(
                 path, chunk_bytes=self.chunk_bytes,
                 max_workers=self.max_workers, executor=self.executor,
-                serial_below=self.serial_below)
+                serial_below=self.serial_below,
+                predicate=self.predicate, scan=scan)
             if self.prefetch > 0:
                 chunks = _iter_prefetch(chunks, self.prefetch)
             for batch, sk in chunks:
@@ -209,6 +229,10 @@ class FleetReplayer:
             if stats is None:
                 raise
             stats.corrupt_files += 1
+        if stats is not None:
+            stats.skipped_segments += scan.segments_skipped
+            stats.bytes_decoded += scan.bytes_decoded
+            stats.bytes_skipped += scan.bytes_skipped
         return events, skipped
 
     def _replay_job(self, job_id: str, paths: list[str],
@@ -304,4 +328,24 @@ class FleetReplayer:
             self.mux.flush()
         stats.seconds = time.perf_counter() - t0
         stats.per_job = dict(sorted(stats.per_job.items()))
+        self._publish_telemetry(stats)
         return stats
+
+    def _publish_telemetry(self, stats: ReplayStats) -> None:
+        """Land one replay's accounting in the multiplexer's telemetry
+        registry (counters accumulate across successive replays into the
+        same mux; the rate gauge reflects the latest run)."""
+        reg = self.mux.telemetry
+        for name, val in (("replay.files", stats.files),
+                          ("replay.events", stats.events),
+                          ("replay.skipped_lines", stats.skipped_lines),
+                          ("replay.corrupt_files", stats.corrupt_files),
+                          ("replay.skipped_segments",
+                           stats.skipped_segments),
+                          ("replay.bytes_decoded", stats.bytes_decoded),
+                          ("replay.bytes_skipped", stats.bytes_skipped)):
+            if val:
+                reg.counter(name).inc(val)
+        reg.gauge("replay.events_per_s").set(stats.events_per_s)
+        for job_id, ev in stats.per_job.items():
+            reg.counter("replay.events", job=job_id).inc(ev)

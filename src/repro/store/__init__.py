@@ -14,15 +14,19 @@ from repro.store.base import (CodecError, TraceCodec, codec_for_path,
                               codecs, get_codec, register_codec,
                               sniff_format)
 from repro.store.compress import have_zstd
-from repro.store.fcs import (FcsCodec, FcsV2Codec, read_fcs, write_fcs)
+from repro.store.fcs import (FcsCodec, FcsV2Codec, FcsV3Codec, read_fcs,
+                             segment_stats, write_fcs)
 from repro.store.jsonl import (JsonlCodec, iter_jsonl_chunks, read_jsonl,
                                read_jsonl_chunked)
+from repro.store.stats import (SEVERITY_KINDS, Predicate, ScanStats,
+                               SegmentStats)
 from repro.store.writer import (SegmentedTraceWriter, job_id_for_path,
                                 seg_index, seg_path)
 
 JSONL = register_codec(JsonlCodec())
 FCS = register_codec(FcsCodec())
 FCS2 = register_codec(FcsV2Codec())
+FCS3 = register_codec(FcsV3Codec())
 
 
 def read_trace(path: str, *, codec: str | None = None,
@@ -46,10 +50,11 @@ def iter_trace_chunks(path: str, *, codec: str | None = None, **opts):
 
 __all__ = [
     "CodecError", "TraceCodec", "JsonlCodec", "FcsCodec", "FcsV2Codec",
-    "JSONL", "FCS", "FCS2", "have_zstd",
+    "FcsV3Codec", "JSONL", "FCS", "FCS2", "FCS3", "have_zstd",
     "register_codec", "get_codec", "codecs", "codec_for_path",
     "sniff_format", "read_trace", "write_trace", "iter_trace_chunks",
     "read_jsonl", "read_jsonl_chunked", "iter_jsonl_chunks", "read_fcs",
-    "write_fcs", "SegmentedTraceWriter", "seg_path", "seg_index",
-    "job_id_for_path",
+    "write_fcs", "segment_stats", "Predicate", "ScanStats",
+    "SegmentStats", "SEVERITY_KINDS", "SegmentedTraceWriter", "seg_path",
+    "seg_index", "job_id_for_path",
 ]

@@ -24,7 +24,7 @@ lossless:
 (Python-literal ``repr`` when it round-trips — preserving tuples exactly,
 which JSON cannot — else JSON) plus sparse (row, code) index columns.
 
-Two segment versions share the header and reader (dispatch is on the
+Three segment versions share the header and reader (dispatch is on the
 header version field, so one file may even mix them — e.g. a daemon
 restarted with a different spill config):
 
@@ -37,6 +37,15 @@ restarted with a different spill config):
       directory stay uncompressed so magic sniffing, segment skipping,
       and per-column tooling keep working.  Write it via the ``fcs2``
       codec (:class:`FcsV2Codec`) or ``write_fcs(..., version=2)``.
+  v3  v2 plus a CRC-protected **statistics block** between the column
+      directory and the payloads (step/time/rank ranges, an event-kind
+      presence bitmask, per-column min/max — see ``repro.store.stats``):
+      the queryable-archive format.  Readers prune whole segments on a
+      :class:`~repro.store.stats.Predicate` without inflating a single
+      slab (``iter_segments(path, predicate=...)``), and
+      :func:`segment_stats` iterates the stats directory alone.  Write
+      it via the ``fcs3`` codec (:class:`FcsV3Codec`) or
+      ``write_fcs(..., version=3)``.
 
 The exact byte layout is documented in ``src/repro/store/README.md``.
 Corruption (bad magic, unknown version, a truncated tail from a killed
@@ -58,11 +67,15 @@ import numpy as np
 from repro.core.columnar import NO_INT, EventBatch
 from repro.store import compress as _comp
 from repro.store.base import CodecError
+from repro.store.stats import (Predicate, ScanStats, SegmentStats,
+                               decode_stats_block, encode_stats_block,
+                               stats_size)
 
 MAGIC = b"FCS1"
 VERSION = 1                              # default (raw-slab) segment version
 VERSION_V2 = 2                           # compressed-slab segment version
-_VERSIONS = (VERSION, VERSION_V2)
+VERSION_V3 = 3                           # v2 + per-segment stats block
+_VERSIONS = (VERSION, VERSION_V2, VERSION_V3)
 
 # header: magic, version, ncols, n_rows, seg_len, names_len, groups_len,
 # extra_len — 48 bytes, so the blob region after it stays 8-aligned.
@@ -238,7 +251,7 @@ def _compress_slab(payload: bytes, enc: int, dt_byte: int, backend: int,
     byte values are byte-shuffled first (timestamps dominate segment
     size and shuffle is what makes them compress); a slab that would not
     shrink is stored verbatim so v2 never exceeds v1 + directory."""
-    if len(payload) < _MIN_COMPRESS_BYTES:
+    if backend == _comp.COMP_STORED or len(payload) < _MIN_COMPRESS_BYTES:
         return _comp.COMP_STORED, payload
     flags = 0
     data = payload
@@ -261,7 +274,8 @@ def encode_segment(batch: EventBatch, *, version: int = VERSION,
     ``version=2`` compresses each column slab (``compression`` names the
     backend — ``"zstd"``/``"zlib"``/``None`` = best available — and
     ``level`` its setting); header, interning blobs, and the column
-    directory stay plain."""
+    directory stay plain.  ``version=3`` additionally writes the stats
+    block (pruning directory) between the directory and the payloads."""
     if version not in _VERSIONS:
         raise ValueError(f"unsupported FCS segment version {version}")
     n = len(batch)
@@ -270,7 +284,7 @@ def encode_segment(batch: EventBatch, *, version: int = VERSION,
     groups_blob = json.dumps(batch.groups, separators=(",", ":")).encode() \
         if batch.groups else b""
     extra_blob, extra_rows, extra_codes = _encode_extra(batch)
-    backend = _comp.resolve_backend(compression) if version == VERSION_V2 \
+    backend = _comp.resolve_backend(compression) if version != VERSION \
         else None
 
     entries: list[bytes] = []
@@ -289,7 +303,7 @@ def encode_segment(batch: EventBatch, *, version: int = VERSION,
         # SAMEAS stores the source column id (always start_ts) in the
         # dtype slot
         dt_byte = 4 if enc == ENC_SAMEAS else _DT_CODE[dt]
-        if version == VERSION_V2:
+        if version != VERSION:
             comp, disk = _compress_slab(payload, enc, dt_byte, backend,
                                         level)
             entries.append(_DIRENT2.pack(col_id, enc, dt_byte, comp,
@@ -301,9 +315,10 @@ def encode_segment(batch: EventBatch, *, version: int = VERSION,
         payloads.append(disk + b"\0" * _pad8(len(disk)))
 
     directory = b"".join(entries)
+    stats = encode_stats_block(cols) if version == VERSION_V3 else b""
     blob = names_blob + groups_blob + extra_blob
     body = blob + b"\0" * _pad8(len(blob)) + directory \
-        + b"\0" * _pad8(len(directory)) + b"".join(payloads)
+        + b"\0" * _pad8(len(directory)) + stats + b"".join(payloads)
     seg_len = _HEADER.size + len(body)
     header = _HEADER.pack(MAGIC, version, NCOLS, n, seg_len,
                           len(names_blob), len(groups_blob),
@@ -416,12 +431,9 @@ def _inflate_slab(buf, pay: int, clen: int, rlen: int, comp: int,
     return data
 
 
-def decode_segment(buf, off: int, path: str) -> tuple[EventBatch, int]:
-    """Decode one segment of ``buf`` starting at byte ``off``; returns
-    ``(batch, next_offset)``.  Dispatches on the header version field
-    (v1 raw slabs / v2 compressed slabs).  Raises :class:`CodecError` on
-    a bad magic, unsupported version, or a slab truncated by a killed
-    writer."""
+def _parse_header(buf, off: int, path: str):
+    """Validate + unpack one segment header; returns ``(version, ncols,
+    n_rows, seg_len, names_len, groups_len, extra_len)``."""
     size = len(buf)
     if off + _HEADER.size > size:
         raise CodecError("truncated segment header "
@@ -435,15 +447,37 @@ def decode_segment(buf, off: int, path: str) -> tuple[EventBatch, int]:
     if version not in _VERSIONS:
         raise CodecError(f"unsupported FCS version {version}",
                          path=path, offset=off)
-    if ncols < NCOLS:
-        raise CodecError(f"segment declares {ncols} columns, need {NCOLS}",
-                         path=path, offset=off)
     if seg_len < _HEADER.size:
         raise CodecError(f"implausible segment length {seg_len}",
                          path=path, offset=off)
     if off + seg_len > size:
         raise CodecError("truncated segment: partial slab "
                          f"(need {seg_len} bytes, {size - off} left)",
+                         path=path, offset=off)
+    return version, ncols, n, seg_len, names_len, groups_len, extra_len
+
+
+def _stats_offset(off: int, ncols: int, names_len: int, groups_len: int,
+                  extra_len: int, dirent_size: int) -> int:
+    """Byte offset of a v3 segment's stats block (right after the padded
+    column directory)."""
+    blob = names_len + groups_len + extra_len
+    dir_bytes = ncols * dirent_size
+    return off + _HEADER.size + blob + _pad8(blob) \
+        + dir_bytes + _pad8(dir_bytes)
+
+
+def decode_segment(buf, off: int, path: str) -> tuple[EventBatch, int]:
+    """Decode one segment of ``buf`` starting at byte ``off``; returns
+    ``(batch, next_offset)``.  Dispatches on the header version field
+    (v1 raw slabs / v2 compressed slabs / v3 compressed slabs + stats
+    block, whose CRC is verified here so corruption never goes quiet).
+    Raises :class:`CodecError` on a bad magic, unsupported version, or a
+    slab truncated by a killed writer."""
+    version, ncols, n, seg_len, names_len, groups_len, extra_len = \
+        _parse_header(buf, off, path)
+    if ncols < NCOLS:
+        raise CodecError(f"segment declares {ncols} columns, need {NCOLS}",
                          path=path, offset=off)
 
     p = off + _HEADER.size
@@ -469,6 +503,12 @@ def decode_segment(buf, off: int, path: str) -> tuple[EventBatch, int]:
     arrays: list[Optional[np.ndarray]] = [None] * NCOLS
     sameas: list[tuple[int, int]] = []
     pay = p + dir_bytes + _pad8(dir_bytes)
+    if version == VERSION_V3:
+        # verify the stats block even on a full decode: a bit-flipped
+        # stats entry must fail loudly here, not mis-prune a later scan
+        decode_stats_block(buf, pay, ncols, off, seg_len, n, version,
+                           path=path)
+        pay += stats_size(ncols)
     for i in range(ncols):
         ent = p + i * dirent.size
         if version == VERSION:
@@ -527,24 +567,85 @@ def _open_buffer(path: str, use_mmap: bool):
         return mmap.mmap(f.fileno(), 0, access=mmap.ACCESS_READ)
 
 
-def iter_segments(path: str, *, use_mmap: bool = True
-                  ) -> Iterator[EventBatch]:
-    """Yield each intact segment in file order; raises
-    :class:`CodecError` at the first corrupt one (after yielding every
-    good segment before it).  Bit-rot that slips past the structural
-    checks (e.g. a flipped dtype byte making a slab misparse) is
-    rewrapped so replay's skip-and-count contract holds."""
+def _segment_stats_at(buf, off: int, path: str) -> SegmentStats:
+    """Stats for the segment at ``off`` without touching any slab: v3
+    parses + CRC-checks the stats block; v1/v2 return header-only facts
+    with ``has_stats=False`` (meaning "cannot prune")."""
+    version, ncols, n, seg_len, names_len, groups_len, extra_len = \
+        _parse_header(buf, off, path)
+    if version != VERSION_V3:
+        return SegmentStats(offset=off, seg_len=seg_len, n_rows=n,
+                            version=version)
+    spos = _stats_offset(off, ncols, names_len, groups_len, extra_len,
+                         _DIRENT2.size)
+    return decode_stats_block(buf, spos, ncols, off, seg_len, n, version,
+                              path=path)
+
+
+def segment_stats(path: str, *, use_mmap: bool = True
+                  ) -> Iterator[SegmentStats]:
+    """Iterate the file's stats directory alone — header + stats block
+    per segment, hopping by ``seg_len`` — never inflating a column slab.
+    v1/v2 segments yield header-only entries (``has_stats=False``);
+    corrupt stats blocks raise :class:`CodecError`."""
     buf = _open_buffer(path, use_mmap)
     off = 0
     size = len(buf)
     while off < size:
         try:
-            batch, off = decode_segment(buf, off, path)
+            st = _segment_stats_at(buf, off, path)
         except CodecError:
             raise
         except (struct.error, IndexError, ValueError, KeyError) as e:
             raise CodecError(f"corrupt segment ({type(e).__name__}: {e})",
                              path=path, offset=off) from e
+        yield st
+        off += st.seg_len
+
+
+def iter_segments(path: str, *, use_mmap: bool = True,
+                  predicate: Optional[Predicate] = None,
+                  scan: Optional[ScanStats] = None
+                  ) -> Iterator[EventBatch]:
+    """Yield each intact segment in file order; raises
+    :class:`CodecError` at the first corrupt one (after yielding every
+    good segment before it).  Bit-rot that slips past the structural
+    checks (e.g. a flipped dtype byte making a slab misparse) is
+    rewrapped so replay's skip-and-count contract holds.
+
+    With a ``predicate``, v3 segments whose stats prove no row can match
+    are skipped on the stats block alone — no slab is inflated, the scan
+    just hops ``seg_len`` bytes.  Pruning is segment-granular and
+    conservative: yielded segments may still contain non-matching rows
+    (callers wanting exact rows apply ``predicate.filter``), and v1/v2
+    segments always decode.  Pass a :class:`ScanStats` as ``scan`` to
+    account decoded vs skipped bytes."""
+    buf = _open_buffer(path, use_mmap)
+    off = 0
+    size = len(buf)
+    prune = predicate is not None and not predicate.empty
+    while off < size:
+        try:
+            if prune:
+                st = _segment_stats_at(buf, off, path)
+                if st.version == VERSION_V3 and not predicate.may_match(st):
+                    if scan is not None:
+                        scan.segments += 1
+                        scan.segments_skipped += 1
+                        scan.bytes_skipped += st.seg_len
+                    off += st.seg_len
+                    continue
+            batch, next_off = decode_segment(buf, off, path)
+        except CodecError:
+            raise
+        except (struct.error, IndexError, ValueError, KeyError) as e:
+            raise CodecError(f"corrupt segment ({type(e).__name__}: {e})",
+                             path=path, offset=off) from e
+        if scan is not None:
+            scan.segments += 1
+            scan.bytes_decoded += next_off - off
+            scan.rows += len(batch)
+        off = next_off
         yield batch
 
 
@@ -560,7 +661,8 @@ def write_fcs(batch: EventBatch, path: str, *, version: int = VERSION,
               compression: Optional[str] = None,
               level: Optional[int] = None) -> int:
     """Append one segment; returns bytes written.  ``version=2`` writes a
-    compressed archival segment (see :func:`encode_segment`)."""
+    compressed archival segment, ``version=3`` adds the stats block
+    (see :func:`encode_segment`)."""
     seg = encode_segment(batch, version=version, compression=compression,
                          level=level)
     with open(path, "ab") as f:
@@ -585,9 +687,11 @@ class FcsCodec:
     def read(self, path: str, *, with_skip_count: bool = False):
         return read_fcs(path, with_skip_count=with_skip_count)
 
-    def iter_chunks(self, path: str, **_ignored
+    def iter_chunks(self, path: str, *,
+                    predicate: Optional[Predicate] = None,
+                    scan: Optional[ScanStats] = None, **_ignored
                     ) -> Iterator[tuple[EventBatch, int]]:
-        for batch in iter_segments(path):
+        for batch in iter_segments(path, predicate=predicate, scan=scan):
             yield batch, 0
 
 
@@ -606,3 +710,18 @@ class FcsV2Codec(FcsCodec):
                  level: Optional[int] = None):
         self.compression = compression
         self.level = level
+
+
+class FcsV3Codec(FcsV2Codec):
+    """Queryable-archive FCS: v2's compressed slabs plus the per-segment
+    stats block, so readers prune segments on (step, time, rank,
+    severity) predicates without inflating slabs.  ~272 bytes/segment of
+    overhead — noise next to any real slab.  Registered as ``"fcs3"`` —
+    select it with ``DaemonConfig(log_codec="fcs3")`` or a ``.fcs3``
+    spill extension; this is what :class:`repro.archive.TraceArchive`
+    expects rotated segments to be written in (though it reads all
+    three versions)."""
+
+    name = "fcs3"
+    extensions = (".fcs3",)
+    version = VERSION_V3

@@ -1,0 +1,428 @@
+"""Trace archive + FCS v3 stats directory + telemetry plane (ISSUE 7).
+
+Covered:
+  * v3 stats-directory correctness: ``segment_stats`` reports the exact
+    step/time/rank ranges, kind bits and per-column min/max of the rows
+    written, and a v3 round-trip stays byte-equivalent;
+  * predicate semantics: severity classes, span-intersection time
+    matching, rank sets, the conservative segment test vs the exact row
+    filter, and the v1/v2 "no stats => must decode" rule;
+  * pruned reads over a MIXED v1/v2/v3 directory are byte-equivalent to
+    the full-decode oracle while actually skipping v3 segments;
+  * a truncated or bit-flipped stats block raises ``CodecError`` from
+    both the stats iterator and the full decode — corruption can never
+    silently mis-prune;
+  * rollup cache staleness: a segment append re-rolls exactly the file
+    it touched (fingerprint invalidation, counted in telemetry);
+  * the telemetry snapshot covers daemon + multiplexer + replayer series
+    and round-trips through the archive's JSON export;
+  * ``FleetReplayer(predicate=...)`` accounts skipped segments/bytes;
+  * anomaly queries, team filtering and the fleet-weather report.
+"""
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.anomaly import Team
+from repro.core.columnar import EventBatch
+from repro.core.daemon import DaemonConfig, TracingDaemon
+from repro.core.engine import DiagnosticEngine, EngineConfig
+from repro.core.events import EventKind, TraceEvent
+from repro.core.history import HistoryStore
+from repro.core.telemetry import TelemetryRegistry
+from repro.core.timeline import (ClusterSimulator, Injection,
+                                 program_from_config)
+from repro import store
+from repro.archive import TraceArchive, format_fleet_weather
+from repro.fleet import FleetConfig, FleetMultiplexer, FleetReplayer
+from repro.store import Predicate, SegmentStats
+from repro.store.base import CodecError
+from repro.store.fcs import _DIRENT2, _HEADER, _parse_header, _stats_offset
+
+N = 16
+
+COLS = ("kind", "name_id", "rank", "issue_ts", "start_ts", "end_ts",
+        "step", "flops", "nbytes", "tokens", "group_id")
+
+
+def _assert_batches_byte_equal(a: EventBatch, b: EventBatch):
+    for c in COLS:
+        ca, cb = getattr(a, c), getattr(b, c)
+        assert ca.dtype == cb.dtype, c
+        assert ca.tobytes() == cb.tobytes(), c
+    assert a.names == b.names
+    assert a.groups == b.groups
+    assert a.extra == b.extra
+
+
+def _prog():
+    cfg = get_config("llama-20b-paper")
+    return program_from_config(cfg, num_chips=N)
+
+
+@pytest.fixture(scope="module")
+def world():
+    prog = _prog()
+    hist = HistoryStore()
+    eng = DiagnosticEngine(
+        EngineConfig(backend="dense-train", num_ranks=N), hist)
+    for seed in range(3):
+        eng.ingest_batch(ClusterSimulator(N, prog, seed=seed).run_batch(4))
+    eng.learn_healthy()
+    return prog, hist
+
+
+def _per_step_segments(b: EventBatch):
+    order, uniq, bounds = b.step_index()
+    return [b.take(order[bounds[i]:bounds[i + 1]])
+            for i in range(uniq.size)]
+
+
+def _write_archive(logdir, prog, *, steps=6, jobs=("job-a", "job-b"),
+                   injections=None):
+    """One rotated v3 file per job, one segment per step."""
+    os.makedirs(logdir, exist_ok=True)
+    for j, job in enumerate(jobs):
+        inj = (injections or {}).get(job, [])
+        b = ClusterSimulator(N, prog, seed=21 + j,
+                             injections=inj).run_batch(steps)
+        w = store.SegmentedTraceWriter(os.path.join(logdir, f"{job}.fcs3"),
+                                       codec="fcs3", rotate_bytes=1)
+        for sb in _per_step_segments(b):
+            w.write(sb)
+
+
+# --------------------------------------------------------------------- #
+# stats directory correctness
+# --------------------------------------------------------------------- #
+def test_v3_stats_match_written_rows(tmp_path):
+    evs = [
+        TraceEvent(EventKind.KERNEL_COMPUTE, "mm", rank=3, issue_ts=10.0,
+                   start_ts=10.5, end_ts=11.0, step=7,
+                   meta={"flops": 2e9}),
+        TraceEvent(EventKind.KERNEL_COMM, "ar", rank=9, issue_ts=11.0,
+                   start_ts=11.25, end_ts=12.5, step=9,
+                   meta={"bytes": 4096}),
+        TraceEvent(EventKind.GC, "gc", rank=5, issue_ts=9.0,
+                   start_ts=9.75, end_ts=9.9),  # unattributed (step=-1)
+    ]
+    b = EventBatch.from_events(evs)
+    path = str(tmp_path / "t.fcs3")
+    store.write_fcs(b, path, version=3)
+
+    _assert_batches_byte_equal(b, store.read_fcs(path))
+
+    (st,) = list(store.segment_stats(path))
+    assert st.version == 3 and st.has_stats and st.n_rows == 3
+    # step range is over attributed rows only
+    assert (st.step_min, st.step_max) == (7, 9)
+    assert st.ts_min == pytest.approx(9.75)    # min start_ts
+    assert st.ts_max == pytest.approx(12.5)    # max end_ts
+    assert (st.rank_min, st.rank_max) == (3, 9)
+    assert set(st.kinds()) == {EventKind.KERNEL_COMPUTE,
+                               EventKind.KERNEL_COMM, EventKind.GC}
+    # per-column min/max: rank col 2, flops col 7 (NaN-excluded),
+    # nbytes col 8 (NO_INT-excluded: only the comm row carries bytes)
+    assert st.column_range(2) == (3, 9)
+    assert st.column_range(7) == pytest.approx((2e9, 2e9))
+    assert st.column_range(8) == (4096, 4096)
+
+
+def test_v1_v2_segments_report_no_stats(tmp_path):
+    b = EventBatch.from_events([
+        TraceEvent(EventKind.STEP, "step_0", rank=0, issue_ts=0.0,
+                   start_ts=0.0, end_ts=1.0, step=0)])
+    path = str(tmp_path / "t.fcs")
+    store.write_fcs(b, path, version=1)
+    store.write_fcs(b, path, version=2)
+    stats = list(store.segment_stats(path))
+    assert [s.version for s in stats] == [1, 2]
+    assert all(not s.has_stats for s in stats)
+    # no stats => any predicate must decode the segment
+    p = Predicate(step_range=(99, 100))
+    assert all(p.may_match(s) for s in stats)
+
+
+# --------------------------------------------------------------------- #
+# predicate semantics
+# --------------------------------------------------------------------- #
+def test_predicate_unit_semantics():
+    with pytest.raises(ValueError, match="unknown severity"):
+        Predicate(severity="catastrophic")
+    assert Predicate().empty
+    assert not Predicate(ranks=[1]).empty
+
+    st = SegmentStats(offset=0, seg_len=100, n_rows=5, version=3,
+                      has_stats=True,
+                      kind_bits=1 << 0,         # only kind code 0
+                      step_min=10, step_max=20, ts_min=5.0, ts_max=9.0,
+                      rank_min=4, rank_max=8)
+    assert Predicate(step_range=(15, 30)).may_match(st)
+    assert not Predicate(step_range=(21, 30)).may_match(st)
+    # time windows test span INTERSECTION, inclusive at both ends
+    assert Predicate(time_range=(9.0, 12.0)).may_match(st)
+    assert not Predicate(time_range=(9.0001, 12.0)).may_match(st)
+    assert Predicate(ranks=[8, 99]).may_match(st)
+    assert not Predicate(ranks=[0, 3, 9]).may_match(st)
+    # empty segment can never match
+    empty = SegmentStats(offset=0, seg_len=64, n_rows=0, version=3,
+                         has_stats=True)
+    assert not Predicate(step_range=(0, 10)).may_match(empty)
+
+    # severity is sugar for a kind set, pruned via the bitmask
+    crit = Predicate(severity="critical")
+    hang = SegmentStats(
+        offset=0, seg_len=100, n_rows=1, version=3, has_stats=True,
+        kind_bits=1 << list(EventKind).index(EventKind.HANG_SUSPECT))
+    assert crit.may_match(hang) and not crit.may_match(st)
+
+    # exact row filter: span intersection + rank set
+    b = EventBatch.from_events([
+        TraceEvent(EventKind.KERNEL_COMPUTE, "a", rank=1, issue_ts=0.0,
+                   start_ts=0.0, end_ts=2.0, step=0),
+        TraceEvent(EventKind.KERNEL_COMPUTE, "b", rank=2, issue_ts=0.0,
+                   start_ts=3.0, end_ts=4.0, step=1),
+    ])
+    got = Predicate(time_range=(1.5, 2.5)).filter(b)
+    assert [got.names[i] for i in got.name_id] == ["a"]
+    got = Predicate(ranks=[2]).filter(b)
+    assert [got.names[i] for i in got.name_id] == ["b"]
+    assert Predicate().filter(b) is b
+
+
+# --------------------------------------------------------------------- #
+# pruned reads over mixed-version directories
+# --------------------------------------------------------------------- #
+def test_pruned_query_byte_equivalent_on_mixed_dir(tmp_path, world):
+    prog, _ = world
+    d = str(tmp_path / "mixed")
+    os.makedirs(d)
+    b = ClusterSimulator(N, prog, seed=5).run_batch(6)
+    segs = _per_step_segments(b)
+    # one job, one file, interleaved v1/v2/v3 segments (the reader
+    # dispatches per segment header) plus a rotated all-v3 piece
+    base = os.path.join(d, "job-m.fcs")
+    for i, sb in enumerate(segs[:4]):
+        store.write_fcs(sb, base, version=(1, 2, 3, 3)[i])
+    rot = os.path.join(d, "job-m.seg001.fcs")
+    for sb in segs[4:]:
+        store.write_fcs(sb, rot, version=3)
+
+    ar = TraceArchive(d)
+    assert ar.jobs == ["job-m"]
+    for pred in (Predicate(step_range=(2, 2)),
+                 Predicate(step_range=(4, 5), ranks=[0, 1]),
+                 Predicate(severity="warning"),
+                 Predicate(time_range=(float(b.start_ts.min()),
+                                       float(np.median(b.end_ts))))):
+        pruned, scan = ar.query_events("job-m", pred, with_scan=True)
+        full, scan_full = ar.query_events("job-m", pred, pushdown=False,
+                                          with_scan=True)
+        _assert_batches_byte_equal(pruned, full)
+        assert scan_full.segments_skipped == 0
+        assert scan.bytes_decoded <= scan_full.bytes_decoded
+
+    # a narrow step window must actually skip v3 segments (only the
+    # 2 v1/v2 segments + the one matching v3 segment decode)
+    _, scan = ar.query_events("job-m", step_range=(3, 3), with_scan=True)
+    assert scan.segments_skipped == 3
+    assert scan.bytes_skipped > 0
+    assert scan.segments == 6
+
+
+# --------------------------------------------------------------------- #
+# corruption: stats block must fail loudly
+# --------------------------------------------------------------------- #
+def _stats_pos(path):
+    with open(path, "rb") as f:
+        buf = f.read()
+    version, ncols, _, _, names_len, groups_len, extra_len = \
+        _parse_header(buf, 0, path)
+    assert version == 3
+    return buf, _stats_offset(0, ncols, names_len, groups_len, extra_len,
+                              _DIRENT2.size)
+
+
+def test_bitflipped_stats_block_raises(tmp_path):
+    b = EventBatch.from_events([
+        TraceEvent(EventKind.KERNEL_COMPUTE, "mm", rank=0, issue_ts=0.0,
+                   start_ts=0.0, end_ts=1.0, step=3)])
+    path = str(tmp_path / "flip.fcs3")
+    store.write_fcs(b, path, version=3)
+    buf, spos = _stats_pos(path)
+    # flip one bit inside step_min (past the CRC field)
+    mut = bytearray(buf)
+    mut[spos + 8] ^= 0x40
+    with open(path, "wb") as f:
+        f.write(bytes(mut))
+    with pytest.raises(CodecError, match="CRC mismatch"):
+        list(store.segment_stats(path))
+    with pytest.raises(CodecError, match="CRC mismatch"):
+        store.read_fcs(path)
+
+
+def test_truncated_stats_block_raises(tmp_path):
+    b = EventBatch.from_events([
+        TraceEvent(EventKind.KERNEL_COMPUTE, "mm", rank=0, issue_ts=0.0,
+                   start_ts=0.0, end_ts=1.0, step=3)])
+    path = str(tmp_path / "trunc.fcs3")
+    store.write_fcs(b, path, version=3)
+    buf, spos = _stats_pos(path)
+    with open(path, "wb") as f:
+        f.write(buf[:spos + 16])        # mid-stats-block
+    with pytest.raises(CodecError):
+        list(store.segment_stats(path))
+    with pytest.raises(CodecError):
+        store.read_fcs(path)
+
+
+def test_fcs3_codec_registered():
+    c = store.codec_for_path("x.fcs3")
+    assert c.name == "fcs3" and c.version == 3
+    assert "fcs3" in store.codecs()
+
+
+# --------------------------------------------------------------------- #
+# rollup cache staleness
+# --------------------------------------------------------------------- #
+def test_rollup_cache_invalidated_by_segment_append(tmp_path, world):
+    prog, _ = world
+    d = str(tmp_path / "roll")
+    _write_archive(d, prog, steps=4, jobs=("job-a",))
+    ar = TraceArchive(d)
+    curve = ar.query_metrics("job-a", metric="throughput")
+    assert [s for s, _ in curve] == [0, 1, 2, 3]
+    builds0 = ar.telemetry.counter("archive.rollup_builds").value
+    assert builds0 > 0
+
+    # warm: pure fingerprint hits, zero new builds
+    assert ar.query_metrics("job-a", metric="throughput") == curve
+    assert ar.telemetry.counter("archive.rollup_builds").value == builds0
+    assert ar.telemetry.counter("archive.rollup_hits").value > 0
+
+    # append one more step to ONE file -> exactly one rollup rebuild
+    b = ClusterSimulator(N, prog, seed=77).run_batch(5)
+    last = _per_step_segments(b)[-1]
+    target = sorted(p for p in os.listdir(d) if p.endswith(".fcs3"))[0]
+    store.write_fcs(last, os.path.join(d, target), version=3)
+    curve2 = ar.query_metrics("job-a", metric="throughput")
+    assert [s for s, _ in curve2] == [0, 1, 2, 3, 4]
+    assert ar.telemetry.counter("archive.rollup_builds").value == builds0 + 1
+    # untouched steps keep their cached records
+    assert curve2[:2] == curve[:2]
+
+
+# --------------------------------------------------------------------- #
+# replayer pushdown accounting
+# --------------------------------------------------------------------- #
+def test_replayer_predicate_accounts_skips(tmp_path, world):
+    prog, hist = world
+    d = str(tmp_path / "rep")
+    _write_archive(d, prog, steps=6, jobs=("job-a",))
+
+    def run(predicate):
+        mux = FleetMultiplexer(FleetConfig(watermark_delay=1), history=hist)
+        mux.add_job("job-a", EngineConfig(backend="dense-train",
+                                          num_ranks=N))
+        stats = FleetReplayer(mux, predicate=predicate).replay_dir(d)
+        mux.finalize()
+        return mux, stats
+
+    _, full = run(None)
+    mux, pruned = run(Predicate(step_range=(5, 5)))
+    assert full.skipped_segments == 0 and full.bytes_skipped == 0
+    assert pruned.skipped_segments == 5
+    assert pruned.bytes_skipped > 0
+    assert 0 < pruned.events < full.events
+    assert pruned.bytes_decoded < full.bytes_decoded
+    snap = mux.telemetry_snapshot()
+    assert snap["counters"]["replay.skipped_segments"] == 5
+    assert snap["counters"]["replay.events{job=job-a}"] == pruned.events
+
+
+# --------------------------------------------------------------------- #
+# telemetry round-trip through the archive
+# --------------------------------------------------------------------- #
+def test_telemetry_covers_pipeline_and_roundtrips(tmp_path, world):
+    prog, hist = world
+    d = str(tmp_path / "tel")
+    _write_archive(d, prog, steps=4, jobs=("job-a",))
+
+    mux = FleetMultiplexer(FleetConfig(watermark_delay=1), history=hist)
+    mux.add_job("job-a", EngineConfig(backend="dense-train", num_ranks=N))
+    FleetReplayer(mux).replay_dir(d)
+    mux.finalize()
+
+    # a live daemon with its OWN registry attaches; the fleet snapshot
+    # merges it in re-tagged with job=...
+    daemon = TracingDaemon(DaemonConfig(rank=0, drain_interval=0.01,
+                                        hang_timeout=1e9))
+    daemon.attach_fleet(mux, "job-live",
+                        EngineConfig(backend="dense-train", num_ranks=1))
+    daemon.attach()
+    daemon.step_begin(0)
+    daemon.step_end(tokens=8)
+    time.sleep(0.1)
+    daemon.stop()
+
+    snap = mux.telemetry_snapshot()
+    c = snap["counters"]
+    assert c["daemon.events_emitted{job=job-live}"] >= 1    # daemon
+    assert c["fleet.late_rows{job=job-a}"] == 0             # multiplexer
+    assert c["replay.events{job=job-a}"] > 0                # replayer
+    assert snap["gauges"]["fleet.watermark_lag{job=job-a}"] == 0.0
+
+    # export through the archive; the snapshot read back is identical
+    ar = TraceArchive(d)
+    path = ar.export_telemetry(snap)
+    assert os.path.basename(path) == "telemetry-000.json"
+    back = ar.telemetry_snapshots()
+    assert len(back) == 1
+    assert back[0]["counters"] == c
+    assert back[0]["gauges"] == snap["gauges"]
+    ar.export_telemetry(snap)
+    assert len(ar.telemetry_snapshots()) == 2
+
+
+# --------------------------------------------------------------------- #
+# anomalies + fleet weather
+# --------------------------------------------------------------------- #
+def test_query_anomalies_and_fleet_weather(tmp_path, world):
+    prog, hist = world
+    d = str(tmp_path / "weather")
+    _write_archive(
+        d, prog, steps=6,
+        injections={"job-b": [Injection(kind="underclock", ranks=(5,),
+                                        factor=2.5, start_step=3)]})
+    ar = TraceArchive(d, history=hist,
+                      engine_config=EngineConfig(backend="dense-train",
+                                                 num_ranks=N))
+    anoms = ar.query_anomalies(job="job-b")
+    assert anoms and all(a.job_id == "job-b" for a in anoms)
+    assert ar.query_anomalies(job="job-a", time_range=(-1.0, -0.5)) == []
+    # team filter accepts the enum or its string value
+    some_team = anoms[0].team
+    assert isinstance(some_team, Team)
+    by_enum = ar.query_anomalies(team=some_team)
+    assert by_enum == ar.query_anomalies(team=some_team.value)
+    assert all(a.team is some_team for a in by_enum)
+    with pytest.raises(ValueError):
+        ar.query_anomalies(team="no-such-team")
+
+    # second query hits the replay cache (directory unchanged)
+    hits0 = ar.telemetry.counter("archive.replay_cache_hits").value
+    ar.query_anomalies()
+    assert ar.telemetry.counter(
+        "archive.replay_cache_hits").value == hits0 + 1
+
+    w = ar.fleet_weather()
+    assert set(w["jobs"]) == {"job-a", "job-b"}
+    assert w["fleet"]["jobs"] == 2
+    assert w["jobs"]["job-b"]["anomalies"] > 0
+    # underclock from step 3 of 6: second-half throughput drops
+    assert w["jobs"]["job-b"]["throughput_trend_pct"] < -5.0
+    txt = format_fleet_weather(w)
+    assert "job-b" in txt and "fleet: 2 jobs" in txt
