@@ -14,8 +14,11 @@ Measures, per (jobs x ranks x steps) scale:
     the cross-job correlation tier's overhead on the same ingest path,
     plus the count of INFRASTRUCTURE reclassifications it emits;
   * parallel-replay: serial (``job_workers=1``) vs parallel (one worker
-    per job) ``replay_dir`` over FCS logs, asserting byte-equivalent
-    anomalies — the offline re-diagnosis path (ISSUE 5).
+    per job) ``replay_dir`` over FCS logs, for BOTH worker kinds —
+    ``thread`` (ISSUE 5, GIL-bound) and ``process`` (ISSUE 8, FCS-over-
+    IPC job workers) — asserting byte-equivalent diagnosis: anomaly
+    stream, ``ReplayStats`` signature, and ``cross_job_failslow``
+    fleet-tier reclassifications all identical to serial.
 
 Acceptance (ISSUE 2): >= 8 concurrent jobs at 256+ ranks each with
 incremental diagnosis sustaining >= 1 Mev/s aggregate.  Results merge into
@@ -127,11 +130,21 @@ def bench_scale(jobs: int, ranks: int, steps: int) -> dict:
         t0 = time.perf_counter()
         trace_store.read_jsonl_chunked(one, chunk_bytes=4 << 20)
         chunk_s = time.perf_counter() - t0
+        # process-executor chunk decode (serial_below=0 forces the
+        # chunked path even on bench-sized files; spawn cost is real
+        # and recorded — it amortizes on multi-GB logs)
+        t0 = time.perf_counter()
+        trace_store.read_jsonl_chunked(one, chunk_bytes=256 << 10,
+                                       executor="process", serial_below=0)
+        proc_s = time.perf_counter() - t0
         line_evs, chunk_evs = one_n / line_s, one_n / chunk_s
+        proc_evs = one_n / proc_s
         emit(f"fleet/decode_line_{label}", 1e6 / line_evs,
              f"{line_evs / 1e6:.2f}Mev_s;events={one_n}")
         emit(f"fleet/decode_chunked_{label}", 1e6 / chunk_evs,
              f"{chunk_evs / 1e6:.2f}Mev_s;events={one_n}")
+        emit(f"fleet/decode_chunked_proc_{label}", 1e6 / proc_evs,
+             f"{proc_evs / 1e6:.2f}Mev_s;events={one_n}")
 
         rmux = FleetMultiplexer(FleetConfig(watermark_delay=1),
                                 history=store)
@@ -152,15 +165,33 @@ def bench_scale(jobs: int, ranks: int, steps: int) -> dict:
         "incremental_diagnose_events_per_s": inc_evs,
         "jsonl_decode_line_events_per_s": line_evs,
         "jsonl_decode_chunked_events_per_s": chunk_evs,
+        "jsonl_decode_chunked_process_events_per_s": proc_evs,
         "replay_e2e_events_per_s": rstats.events_per_s,
     }
 
 
-def bench_parallel_replay(jobs: int, ranks: int, steps: int) -> dict:
+def _stats_sig(stats) -> tuple:
+    """The deterministic part of ``ReplayStats`` (everything but wall
+    time and worker bookkeeping) — must be identical across worker
+    kinds for the same directory."""
+    return (stats.files, stats.events, stats.skipped_lines,
+            stats.corrupt_files, stats.skipped_segments,
+            dict(sorted(stats.per_job.items())))
+
+
+def bench_parallel_replay(jobs: int, ranks: int, steps: int,
+                          worker_kind: str = "thread") -> dict:
     """Serial vs parallel ``replay_dir`` over per-job FCS logs (decode is
     ~free, so this times the diagnosis pipeline itself), ASSERTING the
-    anomaly streams are byte-equivalent.  Scaling is bounded by cores
-    (recorded) and by the GIL share of the per-step detector work."""
+    diagnosis is byte-equivalent: anomaly stream (``str(fa)`` includes
+    the fleet-tier origin), ``ReplayStats`` signature, and the
+    ``cross_job_failslow`` reclassifications all identical to serial.
+
+    ``worker_kind="thread"`` scaling is bounded by cores AND the GIL
+    share of per-step detector work (~1.08x at 2 threads/2 cores);
+    ``"process"`` ships each job's pipeline into a worker process over
+    FCS-encoded IPC (``repro.fleet.ipc``) and is bounded by cores only.
+    """
     cfg = get_config("llama-20b-paper")
     prog = program_from_config(cfg, num_chips=ranks)
     store = HistoryStore()
@@ -168,7 +199,22 @@ def bench_parallel_replay(jobs: int, ranks: int, steps: int) -> dict:
         EngineConfig(backend="dense-train", num_ranks=ranks), store)
     learner.ingest_batch(ClusterSimulator(ranks, prog, seed=1).run_batch(3))
     learner.learn_healthy()
-    chunk_lists, total_events = _make_fleet(prog, jobs, ranks, steps)
+
+    # rack-degradation fleet (first half jitters, two jobs per rack) so
+    # the fleet correlation tier is part of the equivalence surface
+    chunk_lists, total_events, topo = {}, 0, {}
+    n_slow = max(jobs // 2, 2)
+    for i in range(jobs):
+        inj = [Injection(kind="network_jitter", factor=3.0, start_step=3)] \
+            if i < n_slow else []
+        sim = ClusterSimulator(ranks, prog, seed=100 + i, injections=inj)
+        batch = sim.run_batch(steps)
+        job_id = f"pr{i:02d}-{'jitter' if i < n_slow else 'healthy'}"
+        order, uniq, bounds = batch.step_index()
+        chunk_lists[job_id] = [batch.take(order[bounds[j]:bounds[j + 1]])
+                               for j in range(uniq.size)]
+        topo[job_id] = {"rack": f"rack{i // 2}", "switch": f"sw{i // 4}"}
+        total_events += len(batch)
     label = f"{jobs}j_{ranks}r"
 
     logdir = tempfile.mkdtemp(prefix="flare_preplay_bench_")
@@ -178,51 +224,79 @@ def bench_parallel_replay(jobs: int, ranks: int, steps: int) -> dict:
             for c in chunks:           # one segment per step, daemon-shaped
                 trace_store.write_trace(c, path, codec="fcs")
 
-        def _run(jw):
-            best, anoms = float("inf"), None
+        def _run(jw, kind):
+            best, anoms, sig, reclass = float("inf"), None, None, 0
             for _ in range(3):
-                mux = FleetMultiplexer(FleetConfig(watermark_delay=1),
-                                       history=store)
+                mux = FleetMultiplexer(FleetConfig(
+                    watermark_delay=1,
+                    fleet_detectors=["cross_job_failslow"],
+                    topology=topo), history=store)
                 for job_id in chunk_lists:
                     mux.add_job(job_id, EngineConfig(
                         backend="dense-train", num_ranks=ranks))
                 t0 = time.perf_counter()
                 stats = FleetReplayer(mux, chunk_bytes=4 << 20).replay_dir(
-                    logdir, job_workers=jw)
+                    logdir, job_workers=jw, worker_kind=kind)
                 dt = time.perf_counter() - t0
                 assert stats.events == total_events
                 if dt < best:
                     best = dt
-                anoms = [str(a) for a in mux.poll()]
-            return best, anoms
+                out = mux.poll()
+                anoms = [str(fa) for fa in out]
+                reclass = sum(1 for fa in out if fa.origin == "fleet")
+                sig = _stats_sig(stats)
+            return best, anoms, sig, reclass
 
-        serial_s, serial_anoms = _run(1)
-        # one worker per job, capped at the cores that can actually run
-        # them (oversubscribing a small box just measures GIL convoying)
-        par_workers = min(jobs, os.cpu_count() or 1)
-        par_s, par_anoms = _run(par_workers)
-        if par_anoms != serial_anoms:     # hard equivalence gate (ISSUE 5)
+        serial_s, serial_anoms, serial_sig, serial_reclass = \
+            _run(1, "thread")
+        cores = os.cpu_count() or 1
+        if worker_kind == "process":
+            # one worker per job, floor of 2: the process path must
+            # demonstrate real concurrency even when the pool is tiny
+            # (on a 1-core box this records honest contention, not a
+            # fabricated speedup — cores is in the row)
+            par_workers = min(jobs, max(cores, 2))
+        else:
+            # threads oversubscribing a small box just measure GIL
+            # convoying — cap at the cores that can actually run them
+            par_workers = min(jobs, cores)
+        par_s, par_anoms, par_sig, par_reclass = \
+            _run(par_workers, worker_kind)
+        # hard equivalence gate (ISSUE 5 / ISSUE 8): anomaly stream,
+        # replay stats, and fleet-tier reclassifications all identical
+        if par_anoms != serial_anoms:
             raise AssertionError(
-                "parallel replay diagnosis differs from serial: "
+                f"{worker_kind} replay diagnosis differs from serial: "
                 f"serial={serial_anoms!r} parallel={par_anoms!r}")
+        if par_sig != serial_sig:
+            raise AssertionError(
+                f"{worker_kind} replay stats differ from serial: "
+                f"serial={serial_sig!r} parallel={par_sig!r}")
+        if par_reclass != serial_reclass:
+            raise AssertionError(
+                f"{worker_kind} replay fleet tier differs from serial: "
+                f"{serial_reclass} vs {par_reclass} reclassifications")
     finally:
         shutil.rmtree(logdir, ignore_errors=True)
 
     serial_evs, par_evs = total_events / serial_s, total_events / par_s
     speedup = par_evs / serial_evs
-    cores = os.cpu_count() or 1
-    emit(f"fleet/parallel_replay_{label}", 1e6 / par_evs,
+    key = f"fleet/parallel_replay_{label}" if worker_kind == "thread" \
+        else f"fleet/parallel_replay_process_{label}"
+    emit(key, 1e6 / par_evs,
          f"{par_evs / 1e6:.2f}Mev_s;serial={serial_evs / 1e6:.2f}Mev_s;"
-         f"{speedup:.2f}x;workers={par_workers};cores={cores};"
-         "equivalent=TRUE")
+         f"{speedup:.2f}x;kind={worker_kind};workers={par_workers};"
+         f"cores={cores};equivalent=TRUE")
     return {
         "jobs": jobs, "ranks": ranks, "steps": steps,
         "events": total_events, "cores": cores,
         "job_workers": par_workers,
+        "worker_kind": worker_kind,
         "replay_serial_events_per_s": serial_evs,
         "replay_parallel_events_per_s": par_evs,
         "parallel_speedup": speedup,
         "diagnosis_byte_equivalent": True,
+        "fleet_reclassified": serial_reclass,
         "anomalies": len(serial_anoms),
     }
 
@@ -288,18 +362,23 @@ def bench_crossjob(jobs: int, ranks: int, steps: int) -> dict:
     }
 
 
-def main(quick: bool = False):
-    scales = [(4, 64, 4)] if quick else [(8, 256, 8), (12, 256, 8)]
+def main(quick: bool = False, process_replay_only: bool = False):
     results = {}
-    for jobs, ranks, steps in scales:
-        r = bench_scale(jobs, ranks, steps)
-        results[f"{jobs}x{ranks}x{steps}"] = r
-    cj_jobs, cj_ranks, cj_steps = (4, 64, 6) if quick else (8, 256, 8)
-    results[f"crossjob_{cj_jobs}x{cj_ranks}x{cj_steps}"] = \
-        bench_crossjob(cj_jobs, cj_ranks, cj_steps)
-    pr_jobs, pr_ranks, pr_steps = (3, 64, 6) if quick else (4, 256, 8)
-    results[f"parallel_replay_{pr_jobs}x{pr_ranks}x{pr_steps}"] = \
-        bench_parallel_replay(pr_jobs, pr_ranks, pr_steps)
+    pr_jobs, pr_ranks, pr_steps = (4, 64, 6) if quick else (4, 256, 8)
+    if not process_replay_only:
+        scales = [(4, 64, 4)] if quick else [(8, 256, 8), (12, 256, 8)]
+        for jobs, ranks, steps in scales:
+            r = bench_scale(jobs, ranks, steps)
+            results[f"{jobs}x{ranks}x{steps}"] = r
+        cj_jobs, cj_ranks, cj_steps = (4, 64, 6) if quick else (8, 256, 8)
+        results[f"crossjob_{cj_jobs}x{cj_ranks}x{cj_steps}"] = \
+            bench_crossjob(cj_jobs, cj_ranks, cj_steps)
+        results[f"parallel_replay_{pr_jobs}x{pr_ranks}x{pr_steps}"] = \
+            bench_parallel_replay(pr_jobs, pr_ranks, pr_steps,
+                                  worker_kind="thread")
+    results[f"parallel_replay_process_{pr_jobs}x{pr_ranks}x{pr_steps}"] = \
+        bench_parallel_replay(pr_jobs, pr_ranks, pr_steps,
+                              worker_kind="process")
     merge_bench_json(OUT_JSON, results)
     emit("fleet/json", 0.0, f"merged={OUT_JSON}")
     return results
@@ -309,6 +388,9 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="small scale for CI smoke runs")
+    ap.add_argument("--process-replay-only", action="store_true",
+                    help="only the process-sharded replay bench (the CI "
+                         "byte-equivalence gate)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    main(quick=args.quick)
+    main(quick=args.quick, process_replay_only=args.process_replay_only)

@@ -18,7 +18,10 @@ repeatedly.  ``TraceArchive`` answers both at interactive latency:
     from a cache built once per FILE via ``aggregate_slice`` and
     invalidated by (size, mtime) fingerprint — a segment append or
     rotation re-rolls only the file it touched, and warm queries never
-    touch the trace bytes at all.
+    touch the trace bytes at all.  Rollups also PERSIST as
+    ``<trace>.rollup.json`` sidecars keyed by the same fingerprint, so
+    a cold archive process (tomorrow's dashboard restart) answers
+    ``query_metrics`` warm without re-decoding a single segment.
   * **query_anomalies** replays the directory once through a private
     :class:`~repro.fleet.FleetMultiplexer` (same engines, detectors and
     watermark semantics as the live pipeline), caches the merged
@@ -53,7 +56,8 @@ from repro.core.metrics import aggregate_slice
 from repro.core.telemetry import TelemetryRegistry
 from repro.fleet.multiplexer import FleetConfig, FleetMultiplexer
 from repro.fleet.replay import FleetReplayer
-from repro.store import (Predicate, ScanStats, codec_for_path, codecs,
+from repro.store import (ROLLUP_SUFFIX, Predicate, ScanStats,
+                         codec_for_path, codecs, is_sidecar_path,
                          job_id_for_path, seg_index)
 from repro.store.fcs import iter_segments
 
@@ -136,20 +140,25 @@ class TraceArchive:
     :class:`EngineConfig` pins detector set and rank count per job).
     ``telemetry`` shares a registry with the rest of the pipeline —
     archive cache behavior lands there too (``archive.rollup_builds``
-    vs ``archive.rollup_hits``, ``archive.queries{kind=...}``)."""
+    vs ``archive.rollup_hits`` vs ``archive.rollup_disk_hits``,
+    ``archive.queries{kind=...}``).  ``persist_rollups=False`` disables
+    the on-disk sidecar cache (e.g. for read-only media; a failed
+    sidecar write is silently skipped anyway)."""
 
     def __init__(self, directory: str, *,
                  history: Optional[HistoryStore] = None,
                  engine_config: Optional[EngineConfig] = None,
                  fleet_config: Optional[FleetConfig] = None,
                  telemetry: Optional[TelemetryRegistry] = None,
-                 pattern: Optional[str] = None):
+                 pattern: Optional[str] = None,
+                 persist_rollups: bool = True):
         self.directory = directory
         self.history = history
         self.engine_config = engine_config
         self.fleet_config = fleet_config
         self.telemetry = telemetry or TelemetryRegistry()
         self.pattern = pattern
+        self.persist_rollups = persist_rollups
         # job_id -> [paths] in rotation order, refreshed per query
         self._files: dict[str, list[str]] = {}
         # path -> (fingerprint, {step: record})
@@ -161,6 +170,8 @@ class TraceArchive:
         self._mux: Optional[FleetMultiplexer] = None
         self._c_builds = self.telemetry.counter("archive.rollup_builds")
         self._c_hits = self.telemetry.counter("archive.rollup_hits")
+        self._c_disk_hits = self.telemetry.counter(
+            "archive.rollup_disk_hits")
 
     # ------------------------------------------------------------------ #
     # discovery
@@ -170,7 +181,8 @@ class TraceArchive:
         patterns = (self.pattern,) if self.pattern else _file_patterns()
         paths = sorted({p for pat in patterns
                         for p in glob.glob(
-                            os.path.join(self.directory, pat))},
+                            os.path.join(self.directory, pat))
+                        if not is_sidecar_path(p)},
                        key=lambda p: (job_id_for_path(p), seg_index(p), p))
         files: dict[str, list[str]] = {}
         for p in paths:
@@ -207,20 +219,24 @@ class TraceArchive:
                      step_range: Optional[tuple] = None,
                      time_range: Optional[tuple] = None,
                      ranks=None, kinds=None, severity: Optional[str] = None,
+                     columns: Optional[dict] = None,
                      pushdown: bool = True, with_scan: bool = False):
         """Exact matching rows for ``job`` as one :class:`EventBatch`.
 
-        Build the predicate inline (``step_range=...``/``severity=...``)
-        or pass one.  ``pushdown=False`` decodes every segment (the
-        equivalence oracle — same row filter, same concat order, so
-        results are byte-identical; benchmarks assert it).  With
-        ``with_scan=True`` returns ``(batch, ScanStats)`` so callers see
-        how many bytes the stats directory saved."""
+        Build the predicate inline (``step_range=...``/``severity=...``/
+        ``columns={"flops": (lo, hi)}`` — per-column value bounds pruned
+        against the v3 per-column min/max) or pass one.
+        ``pushdown=False`` decodes every segment (the equivalence oracle
+        — same row filter, same concat order, so results are
+        byte-identical; benchmarks assert it).  With ``with_scan=True``
+        returns ``(batch, ScanStats)`` so callers see how many bytes the
+        stats directory saved."""
         self.telemetry.counter("archive.queries", kind="events").inc()
         if predicate is None:
             predicate = Predicate(step_range=step_range,
                                   time_range=time_range, ranks=ranks,
-                                  kinds=kinds, severity=severity)
+                                  kinds=kinds, severity=severity,
+                                  columns=columns)
         scan = ScanStats()
         parts: list[EventBatch] = []
         for path in self._job_paths(job):
@@ -242,14 +258,64 @@ class TraceArchive:
     # ------------------------------------------------------------------ #
     # metrics: cached per-file rollups
     # ------------------------------------------------------------------ #
+    def _rollup_sidecar(self, path: str) -> str:
+        return path + ROLLUP_SUFFIX
+
+    def _load_disk_rollup(self, path: str, fp: tuple
+                          ) -> Optional[dict[int, dict]]:
+        """Sidecar rollup for ``path`` if present AND fingerprint-fresh;
+        any unreadable/stale/mismatched sidecar means rebuild."""
+        try:
+            with open(self._rollup_sidecar(path)) as f:
+                data = json.load(f)
+        except (OSError, ValueError):
+            return None
+        if tuple(data.get("fingerprint", ())) != fp:
+            return None
+        rollup: dict[int, dict] = {}
+        try:
+            for s, rec in data["rollup"].items():
+                rec = dict(rec)
+                rec["rank_flops"] = {int(r): v for r, v
+                                     in rec["rank_flops"].items()}
+                rollup[int(s)] = rec
+        except (KeyError, TypeError, ValueError):
+            return None                    # malformed sidecar: rebuild
+        return rollup
+
+    def _store_disk_rollup(self, path: str, fp: tuple,
+                           rollup: dict[int, dict]) -> None:
+        """Best-effort atomic sidecar write (tmp + rename); a read-only
+        archive directory just stays cold."""
+        sidecar = self._rollup_sidecar(path)
+        tmp = sidecar + ".tmp"
+        try:
+            with open(tmp, "w") as f:
+                json.dump({"fingerprint": list(fp), "rollup": rollup}, f,
+                          separators=(",", ":"))
+            os.replace(tmp, sidecar)
+        except OSError:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+
     def _file_rollup(self, path: str) -> dict[int, dict]:
-        """step -> record for one file, (size, mtime)-cached: an append
-        or rotation invalidates exactly the file it touched."""
+        """step -> record for one file, (size, mtime)-cached in memory
+        AND on disk (``<trace>.rollup.json``): an append or rotation
+        invalidates exactly the file it touched; a fresh process warms
+        from the sidecars without decoding anything."""
         fp = _fingerprint(path)
         cached = self._rollups.get(path)
         if cached is not None and cached[0] == fp:
             self._c_hits.inc()
             return cached[1]
+        if self.persist_rollups:
+            rollup = self._load_disk_rollup(path, fp)
+            if rollup is not None:
+                self._c_disk_hits.inc()
+                self._rollups[path] = (fp, rollup)
+                return rollup
         self._c_builds.inc()
         batch = codec_for_path(path).read(path)
         rollup: dict[int, dict] = {}
@@ -267,6 +333,8 @@ class TraceArchive:
                 if m is not None:
                     rollup[s] = _rollup_record(m, len(sb))
         self._rollups[path] = (fp, rollup)
+        if self.persist_rollups:
+            self._store_disk_rollup(path, fp, rollup)
         return rollup
 
     def rollups(self, job: str) -> dict[int, dict]:

@@ -213,6 +213,14 @@ class DiagnosticEngine:
         truth for watermark/late-event bookkeeping in the fleet)."""
         return self._evaluated
 
+    def adopt_evaluated(self, steps) -> None:
+        """Mark ``steps`` as already diagnosed — by ANOTHER engine whose
+        results this one is mirroring (a fleet replay worker process ran
+        the job's evaluation; the parent adopts its record so late-row
+        bookkeeping and re-flush stay consistent).  Detector state does
+        NOT transfer; only the evaluated-step set does."""
+        self._evaluated.update(int(s) for s in steps)
+
     def evaluate_new_steps(self, upto: Optional[int] = None) -> list[Anomaly]:
         """Incremental evaluation over the engine's OWN store: evaluate, in
         ascending order, every step not yet evaluated — optionally only

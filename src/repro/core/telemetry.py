@@ -46,6 +46,17 @@ def series_key(name: str, tags: Optional[dict] = None) -> str:
     return f"{name}{{{inner}}}"
 
 
+def parse_series_key(key: str) -> tuple[str, dict]:
+    """Inverse of :func:`series_key`: ``(name, tags)`` from a serialized
+    key.  Tag values come back as strings — the only form they ever had
+    in a key."""
+    if "{" not in key:
+        return key, {}
+    name, _, inner = key.partition("{")
+    tags = dict(kv.split("=", 1) for kv in inner.rstrip("}").split(","))
+    return name, tags
+
+
 class Counter:
     """Monotonic counter handle.  ``inc`` returns the post-increment
     value so warn-once patterns (``if c.inc() == 1: warn(...)``) need no
@@ -149,13 +160,30 @@ class TelemetryRegistry:
                     base[kind][k] = val
         return base
 
+    def absorb(self, snap: dict,
+               extra_tags: Optional[dict] = None) -> None:
+        """Fold a snapshot INTO this registry's live handles: counters
+        add their value, gauges last-write-win.  Unlike
+        :meth:`merge_snapshot` (which merges dicts), this materializes
+        handles, so a process-sharded worker's telemetry lands on the
+        parent's registry exactly as if the worker had incremented the
+        parent's counters directly — the fleet replay path uses this to
+        merge per-job worker registries across the IPC boundary."""
+        for key, val in snap.get("counters", {}).items():
+            k = _retag(key, extra_tags) if extra_tags else key
+            name, tags = parse_series_key(k)
+            if val:
+                self.counter(name, **tags).inc(val)
+            else:
+                self.counter(name, **tags)       # materialize zero series
+        for key, val in snap.get("gauges", {}).items():
+            k = _retag(key, extra_tags) if extra_tags else key
+            name, tags = parse_series_key(k)
+            self.gauge(name, **tags).set(val)
+
 
 def _retag(key: str, extra_tags: dict) -> str:
     """Re-render a serialized series key with extra tags merged in."""
-    if "{" in key:
-        name, _, inner = key.partition("{")
-        tags = dict(kv.split("=", 1) for kv in inner.rstrip("}").split(","))
-    else:
-        name, tags = key, {}
+    name, tags = parse_series_key(key)
     tags.update({k: str(v) for k, v in extra_tags.items()})
     return series_key(name, tags)

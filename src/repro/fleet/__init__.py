@@ -13,7 +13,10 @@ Quickstart::
     mux.finalize()                            # flush watermarks + hangs
 
 Live daemons plug in via ``daemon.attach_fleet(mux, "job-a")``; recorded
-logs via ``FleetReplayer(mux).replay_dir("logs/")``.
+logs via ``FleetReplayer(mux).replay_dir("logs/")`` — add
+``worker_kind="process"`` to shard per-job pipelines across worker
+processes (``repro.fleet.ipc``), byte-equivalent to serial and free of
+the GIL.
 
 Cross-job diagnosis plugs in through the fleet-scope detector tier::
 
@@ -26,6 +29,7 @@ rack/switch are reclassified as INFRASTRUCTURE, ``origin="fleet"``).
 """
 from repro.core.detectors.fleet import (CrossJobFailSlowCorrelator,  # noqa: F401
                                         FleetContext, FleetDetector)
+from repro.fleet.ipc import ProcessWorkerPool  # noqa: F401
 from repro.fleet.multiplexer import (FleetConfig, FleetJob,  # noqa: F401
                                      FleetMultiplexer)
 from repro.fleet.replay import FleetReplayer, ReplayStats  # noqa: F401
@@ -36,7 +40,7 @@ from repro.fleet.stream import (DEFAULT_ROUTES, AnomalyStream,  # noqa: F401
 
 __all__ = [
     "FleetConfig", "FleetJob", "FleetMultiplexer",
-    "FleetReplayer", "ReplayStats",
+    "FleetReplayer", "ReplayStats", "ProcessWorkerPool",
     "SharedInterner", "StepPartitionedStore",
     "AnomalyStream", "FleetAnomaly", "DEFAULT_ROUTES",
     "FleetDetector", "FleetContext", "CrossJobFailSlowCorrelator",

@@ -1,0 +1,245 @@
+"""FCS-over-IPC process workers: the fleet replay engine past the GIL.
+
+Thread-per-job replay (``FleetReplayer.replay_dir``) is byte-equivalent
+to serial but GIL-bound — per-step diagnosis interleaves short Python
+sections with numpy windows, so two worker threads on two cores buy
+~1.08x, not 2x.  This module ships each job's whole pipeline — decode ->
+step-aligned ingest -> ``evaluate_step_batch`` on a private
+:class:`~repro.core.engine.DiagnosticEngine` — into a worker *process*,
+and moves data across the boundary in the cheapest shapes the codebase
+already has:
+
+  * **inputs**: replay workers read trace files straight from disk (no
+    event rows cross at all); live-streaming callers ship
+    :class:`~repro.core.columnar.EventBatch` chunks as FCS-encoded
+    segments (``repro.store.encode_batch_bytes`` — the archival spill
+    format, ~11.5 B/event at 256 ranks) instead of numpy pickles;
+  * **outputs**: anomalies stream back incrementally per file on a
+    BOUNDED result queue (backpressure: a slow parent stalls its
+    workers, not the box's memory), followed by one terminal envelope
+    per job carrying the compact serialized end state — job-local
+    ``ReplayStats``, the recorded fleet-tier observation sequence
+    (``defer_fleet_tier(record=True)``), the worker's intern tables,
+    a telemetry snapshot, and the store/engine summary the parent
+    mirrors back onto its own ``FleetJob``.
+
+Determinism contract: a worker owns exactly one job at a time and ships
+that job's anomalies in push order; the parent re-pushes on ITS stream
+(per-job order preserved; the stream's ``(ts, job_id, seq)`` drain sort
+already makes cross-job interleave scheduling-independent), merges
+intern tables and stats in sorted-path group order, and replays the
+recorded fleet-tier observations through ``resolve_fleet_tier`` in the
+same two phases serial replay produces (ingest-phase in group order,
+flush-phase in registration order).  Diagnosis output is therefore
+byte-equivalent to serial by construction — asserted end to end in
+``benchmarks/fleet.py`` and ``tests/test_fleet.py``.
+
+Worker entry points are top-level functions with picklable arguments,
+so the pool works under both ``fork`` (Linux default) and ``spawn``.
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import queue as _queue
+import threading
+import traceback
+from typing import Callable, Optional
+
+# task envelope: ("replay", job_id, [paths], engine_cfg, record_fleet)
+#             or ("batches", job_id, [fcs_bytes], engine_cfg, record_fleet)
+#             or None (shutdown sentinel, one per worker)
+TASK_REPLAY = "replay"
+TASK_BATCHES = "batches"
+
+# result envelopes, on the owning worker's bounded queue:
+#   ("anomalies", job_id, [(ts, Anomaly), ...])   incremental, per file
+#   ("job", job_id, payload_dict)                 terminal, per job
+#   ("error", job_id, traceback_str)
+#   ("exit",)                                     worker is done
+_EXIT = ("exit",)
+
+
+def _run_job(result_q, kind: str, job_id: str, payload, engine_cfg,
+             record_fleet: bool, init: dict) -> None:
+    """One job's full pipeline inside the worker process: private
+    multiplexer + engine, eager flush (worker state dies with the
+    process), results shipped as they appear."""
+    # imported here, not at module top: repro.fleet.replay imports this
+    # module, and the worker only pays the import once per process
+    from repro.fleet.multiplexer import FleetConfig, FleetMultiplexer
+    from repro.fleet.replay import FleetReplayer, ReplayStats
+    from repro.store import decode_batch_bytes
+
+    mux = FleetMultiplexer(FleetConfig(**init["fleet"]),
+                           history=init["history"])
+    mux.add_job(job_id, engine_cfg)
+    # record the fleet-tier observation sequence for the parent (which
+    # owns the actual cross-job detectors) — skipped when it has none
+    mux.defer_fleet_tier(record=record_fleet)
+    rep = FleetReplayer(mux, job_workers=1, **init["replay"])
+    stats = ReplayStats(worker_kind="process")
+
+    def _ship_anomalies() -> None:
+        pend = mux.stream.drain_raw()
+        if pend:
+            result_q.put(("anomalies", job_id,
+                          [(fa.ts, fa.anomaly) for fa in pend]))
+
+    if kind == TASK_REPLAY:
+        rep._replay_job(job_id, payload, stats, on_file=_ship_anomalies)
+    elif kind == TASK_BATCHES:
+        for blob in payload:
+            batch = decode_batch_bytes(blob)
+            stats.events += len(batch)
+            stats.per_job[job_id] = stats.per_job.get(job_id, 0) \
+                + len(batch)
+            rep._ingest_step_aligned(job_id, batch)
+            _ship_anomalies()
+    else:
+        raise ValueError(f"unknown worker task kind {kind!r}")
+
+    # split the recorded fleet observations at the flush boundary: the
+    # parent replays ingest-phase obs in group order and flush-phase obs
+    # in registration order — the exact serial sequence
+    obs_ingest = mux.drain_deferred_fleet().get(job_id, [])
+    mux.flush(job_id)
+    obs_flush = mux.drain_deferred_fleet().get(job_id, [])
+    _ship_anomalies()
+    job = mux.job(job_id)
+    result_q.put(("job", job_id, {
+        "stats": stats,
+        "obs_ingest": obs_ingest,
+        "obs_flush": obs_flush,
+        "state": {
+            "store": job.store.summary(),
+            "last_closed": job.last_closed,
+            "hang_reported": job.hang_reported,
+            "evaluated_steps": sorted(job.engine.evaluated_steps),
+        },
+        "names": list(mux.interner.names),
+        "groups": list(mux.interner.groups),
+        "telemetry": mux.telemetry.snapshot(),
+    }))
+
+
+def _worker_main(task_q, result_q, init: dict) -> None:
+    """Worker loop: pull job tasks until the shutdown sentinel.  An
+    exception in one job is shipped as an ``error`` envelope and the
+    worker moves on — partial fleet progress is never thrown away by
+    one bad job."""
+    while True:
+        task = task_q.get()
+        if task is None:
+            break
+        kind, job_id, payload, engine_cfg, record_fleet = task
+        try:
+            _run_job(result_q, kind, job_id, payload, engine_cfg,
+                     record_fleet, init)
+        except BaseException:
+            try:
+                result_q.put(("error", job_id, traceback.format_exc()))
+            except Exception:
+                break
+    result_q.put(_EXIT)
+
+
+class ProcessWorkerPool:
+    """Fixed pool of job-replay worker processes.
+
+    One shared task queue (jobs outnumber workers; each worker pulls its
+    next job when free) and one BOUNDED result queue per worker — a
+    worker handles one job at a time, so the bound is a per-job result
+    budget: a parent that falls behind consuming anomalies stalls the
+    producing worker instead of buffering unboundedly.
+
+    Lifecycle: construct (forks/spawns immediately), ``submit`` every
+    task, then ``drain`` exactly once — it enqueues one shutdown
+    sentinel per worker, consumes every result, joins, and raises if
+    any worker errored or died.  ``close`` is the unconditional cleanup
+    (safe after ``drain``; terminates stragglers otherwise)."""
+
+    def __init__(self, workers: int, init: dict, *, result_depth: int = 8,
+                 mp_context=None):
+        ctx = mp_context or mp.get_context()
+        self._task_q = ctx.Queue()
+        self._procs = []
+        self._result_qs = []
+        self._results: dict[str, dict] = {}
+        self._errors: list[tuple[str, str]] = []
+        for i in range(workers):
+            rq = ctx.Queue(maxsize=max(result_depth, 2))
+            p = ctx.Process(target=_worker_main, args=(self._task_q, rq, init),
+                            daemon=True, name=f"flare-fleet-worker-{i}")
+            p.start()
+            self._procs.append(p)
+            self._result_qs.append(rq)
+
+    def submit(self, task) -> None:
+        self._task_q.put(task)
+
+    def drain(self, on_anomalies: Optional[Callable] = None
+              ) -> dict[str, dict]:
+        """Consume every worker's results until all exit; returns
+        ``job_id -> terminal payload``.  ``on_anomalies(job_id, items)``
+        fires for each incremental anomaly envelope (items are ``(ts,
+        Anomaly)`` pairs in the worker's push order) — it may be called
+        from several drainer threads at once, one per worker, so it must
+        only touch internally-locked state (the anomaly stream is)."""
+        for _ in self._procs:
+            self._task_q.put(None)
+        threads = [threading.Thread(
+            target=self._drain_one, args=(p, rq, on_anomalies),
+            daemon=True, name=f"flare-fleet-drain-{i}")
+            for i, (p, rq) in enumerate(zip(self._procs, self._result_qs))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for p in self._procs:
+            p.join(timeout=10.0)
+        if self._errors:
+            job_id, tb = self._errors[0]
+            more = f" (+{len(self._errors) - 1} more)" \
+                if len(self._errors) > 1 else ""
+            raise RuntimeError(
+                f"fleet replay worker failed on job {job_id!r}{more}:\n{tb}")
+        return self._results
+
+    def _drain_one(self, proc, rq, on_anomalies) -> None:
+        dead_polls = 0
+        while True:
+            try:
+                env = rq.get(timeout=0.2)
+            except _queue.Empty:
+                if not proc.is_alive():
+                    # grace polls: the feeder pipe may still hold data
+                    # written just before an abnormal death
+                    dead_polls += 1
+                    if dead_polls >= 3:
+                        self._errors.append((
+                            "<unknown>",
+                            f"worker {proc.name} died without an exit "
+                            f"envelope (exitcode {proc.exitcode})"))
+                        return
+                continue
+            dead_polls = 0
+            kind = env[0]
+            if kind == "exit":
+                return
+            if kind == "anomalies":
+                if on_anomalies is not None:
+                    on_anomalies(env[1], env[2])
+            elif kind == "job":
+                self._results[env[1]] = env[2]
+            elif kind == "error":
+                self._errors.append((env[1], env[2]))
+
+    def close(self) -> None:
+        for p in self._procs:
+            if p.is_alive():
+                p.terminate()
+        for p in self._procs:
+            p.join(timeout=5.0)
+        for q in (*self._result_qs, self._task_q):
+            q.close()
+            q.cancel_join_thread()

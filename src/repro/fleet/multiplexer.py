@@ -65,6 +65,15 @@ class FleetConfig:
     # self-telemetry registry; None = a private one per multiplexer.
     # ``telemetry_snapshot()`` merges attached daemons' registries in.
     telemetry: Optional[TelemetryRegistry] = None
+    # per-job memory cap on the step-partitioned store, in buffered ROWS
+    # (None = unbounded).  When a job's pending slices exceed the cap,
+    # the oldest pending steps are force-closed (evaluated early) until
+    # under it — bounded memory at the cost of possibly dropping
+    # late-arriving rows for those steps on pathologically out-of-order
+    # streams.  Deterministic per job (depends only on that job's own
+    # ingest sequence), so serial/thread/process replays stay
+    # byte-equivalent at any cap.  ``fleet.forced_closes{job=}`` counts.
+    max_pending_rows: Optional[int] = None
 
 
 @dataclass
@@ -135,6 +144,9 @@ class FleetMultiplexer:
         # (order-sensitive) cross-job detectors from racing worker
         # threads; resolve_fleet_tier replays them deterministically
         self._defer_fleet = False
+        # record mode: buffer observations even with no local fleet
+        # detectors (a worker process records for its parent's tier)
+        self._record_fleet = False
         self._deferred_fleet: dict[str, list] = {}
 
     # ------------------------------------------------------------------ #
@@ -223,28 +235,48 @@ class FleetMultiplexer:
         single suspect clear the majority-hang threshold."""
         return max(job.store.num_ranks, job.engine.cfg.num_ranks)
 
+    def _close_step(self, job: FleetJob, s: int) -> None:
+        sb = job.store.pop_step(s)
+        anoms = job.engine.evaluate_step_batch(
+            sb, s, num_ranks=self._job_ranks(job))
+        ts = float(sb.end_ts.max()) if len(sb) else job.store.last_ts
+        job.last_closed = s
+        for a in anoms:
+            self.stream.push(job.job_id, a, ts)
+            job.count_anomaly()
+        self._observe_fleet(job.job_id, s, anoms, ts)
+
     def _advance(self, job: FleetJob, flush: bool = False) -> None:
         limit = None if flush \
             else job.store.max_step_seen - self.cfg.watermark_delay
         for s in job.store.pending_steps():
             if limit is not None and s > limit:
                 break
-            sb = job.store.pop_step(s)
-            anoms = job.engine.evaluate_step_batch(
-                sb, s, num_ranks=self._job_ranks(job))
-            ts = float(sb.end_ts.max()) if len(sb) else job.store.last_ts
-            job.last_closed = s
-            for a in anoms:
-                self.stream.push(job.job_id, a, ts)
-                job.count_anomaly()
-            self._observe_fleet(job.job_id, s, anoms, ts)
+            self._close_step(job, s)
+        # memory cap: if the pending slices still exceed the per-job row
+        # budget, force-close oldest-first until under it (the newest
+        # pending step always stays buffered — it is the one still
+        # filling).  Early closure means late rows for those steps get
+        # dropped, which is the documented trade-off of the cap.
+        cap = self.cfg.max_pending_rows
+        if cap is not None and not flush and job.store.buffered_rows > cap:
+            forced = 0
+            while job.store.buffered_rows > cap:
+                pending = job.store.pending_steps()
+                if len(pending) <= 1:
+                    break
+                self._close_step(job, pending[0])
+                forced += 1
+            if forced:
+                self.telemetry.counter("fleet.forced_closes",
+                                       job=job.job_id).inc(forced)
         # watermark lag = steps seen but not yet closed; pending depth =
         # step buckets currently held (the mux's "queue")
         job.watermark_lag.set(max(job.store.max_step_seen - job.last_closed,
                                   0))
         job.pending_depth.set(len(job.store.pending_steps()))
 
-    def defer_fleet_tier(self) -> None:
+    def defer_fleet_tier(self, record: bool = False) -> None:
         """Buffer fleet-scope observations instead of running them.
 
         Cross-job detectors are ORDER-sensitive (a correlation window
@@ -252,9 +284,34 @@ class FleetMultiplexer:
         replay workers racing into the tier would make fleet emissions
         depend on thread scheduling.  While deferred, each closed step's
         ``(step, anomalies, ts)`` is queued per job; call
-        :meth:`resolve_fleet_tier` after the workers join."""
+        :meth:`resolve_fleet_tier` after the workers join.
+
+        ``record=True`` buffers observations even when THIS multiplexer
+        has no fleet detectors: a replay worker process records its
+        job's observation sequence so the parent (which owns the real
+        detectors) can replay it via :meth:`buffer_fleet_observations` +
+        :meth:`resolve_fleet_tier`."""
         with self._fleet_det_lock:
             self._defer_fleet = True
+            self._record_fleet = record
+
+    def drain_deferred_fleet(self) -> dict[str, list]:
+        """Take the buffered ``job_id -> [(step, anomalies, ts), ...]``
+        observations (deferral stays on).  A worker process calls this
+        to ship its job's sequence across the IPC boundary."""
+        with self._fleet_det_lock:
+            deferred, self._deferred_fleet = self._deferred_fleet, {}
+        return deferred
+
+    def buffer_fleet_observations(self, job_id: str, obs) -> None:
+        """Append recorded observations (a worker's shipped sequence)
+        to the deferred buffer for :meth:`resolve_fleet_tier`."""
+        if not obs:
+            return
+        with self._fleet_det_lock:
+            self._deferred_fleet.setdefault(job_id, []).extend(
+                (int(step), list(anoms), float(ts))
+                for step, anoms, ts in obs)
 
     def resolve_fleet_tier(self, job_order: Optional[list] = None) -> None:
         """Stop deferring and replay the buffered observations through
@@ -267,6 +324,7 @@ class FleetMultiplexer:
         ``None`` falls back to registration order."""
         with self._fleet_det_lock:
             self._defer_fleet = False
+            self._record_fleet = False
             deferred, self._deferred_fleet = self._deferred_fleet, {}
         if not deferred:
             return
@@ -285,7 +343,7 @@ class FleetMultiplexer:
                        ts: float) -> None:
         """Feed one closed step's anomalies to the fleet-scope tier and
         push whatever it emits (tagged ``origin="fleet"``)."""
-        if not self.fleet_detectors or not anoms:
+        if not anoms or not (self.fleet_detectors or self._record_fleet):
             return
         # one lock for the whole tier: fleet detectors correlate ACROSS
         # jobs, so unlike the per-job engines their state is shared by
@@ -302,6 +360,25 @@ class FleetMultiplexer:
                         j = self._jobs.get(jid)
                     if j is not None:
                         j.count_anomaly()
+
+    def restore_job_state(self, job_id: str, state: dict) -> None:
+        """Mirror a replay worker process's per-job end state onto this
+        (parent) multiplexer: store summary facts, watermark position,
+        hang flag, and the engine's evaluated-step record — so
+        ``stats()``, a later ``flush()``, and late-row bookkeeping
+        behave exactly as if the job had been replayed in-process.
+        Anomaly counts are NOT restored; the parent counts them as it
+        re-pushes the worker's shipped anomalies."""
+        job = self.job(job_id)
+        with job.lock:
+            job.store.restore_summary(state["store"])
+            job.last_closed = max(job.last_closed, int(state["last_closed"]))
+            job.hang_reported = job.hang_reported or bool(
+                state["hang_reported"])
+            job.engine.adopt_evaluated(state["evaluated_steps"])
+            job.watermark_lag.set(
+                max(job.store.max_step_seen - job.last_closed, 0))
+            job.pending_depth.set(len(job.store.pending_steps()))
 
     def _maybe_hang(self, job: FleetJob) -> None:
         stacks = job.store.hang_stacks

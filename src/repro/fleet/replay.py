@@ -20,21 +20,34 @@ directories replay in one pass:
     segment still replays), and unreadable files.
 
 ``replay_dir`` is a PARALLEL pipeline: per-job engines are lock-isolated
-(``repro.fleet.multiplexer``), so one worker thread per job drives that
-job's decode -> step-aligned ingest -> incremental diagnosis chain
-end to end, overlapping jobs on a multi-core box.  A bounded per-job
-prefetch queue lets each job's decode run a couple of chunks ahead of
-its diagnosis (backpressure: a slow engine stalls its own decoder, not
-the fleet's memory).  The result is byte-equivalent to serial replay:
+(``repro.fleet.multiplexer``), so one worker per job drives that job's
+decode -> step-aligned ingest -> incremental diagnosis chain end to
+end, overlapping jobs on a multi-core box.  A bounded per-job prefetch
+queue lets each job's decode run a couple of chunks ahead of its
+diagnosis (backpressure: a slow engine stalls its own decoder, not the
+fleet's memory).  Workers come in two kinds:
+
+  * ``worker_kind="thread"`` (default): cheap, shares the multiplexer
+    directly — but GIL-bound, so it only overlaps the numpy windows
+    (~1.08x at 2 workers / 2 cores);
+  * ``worker_kind="process"``: each job's whole pipeline runs in a
+    worker PROCESS (``repro.fleet.ipc``) on a private engine, anomalies
+    and end state shipped back over bounded queues, event batches
+    crossing the boundary (when they must at all) as FCS bytes — real
+    multi-core scaling for the decode+diagnose hot path.
+
+Either kind is byte-equivalent to serial replay:
 
   * jobs are registered up front in sorted path order, so registration
-    (and thus flush/finalize) order never depends on thread timing;
+    (and thus flush/finalize) order never depends on worker timing;
   * per-worker ``ReplayStats`` merge deterministically after the join
     (``per_job`` is emitted key-sorted either way);
   * the order-sensitive fleet-scope detector tier is DEFERRED while
     workers run and resolved job by job afterwards
     (``FleetMultiplexer.defer_fleet_tier``), reproducing the serial
-    one-job-at-a-time observation sequence.
+    one-job-at-a-time observation sequence — process workers RECORD
+    their job's observations and ship them back for the same
+    resolution.
 """
 from __future__ import annotations
 
@@ -49,7 +62,8 @@ from typing import Iterable, Iterator, Optional
 
 from repro.fleet.multiplexer import FleetMultiplexer
 from repro.store import (CodecError, Predicate, ScanStats, codec_for_path,
-                         codecs, job_id_for_path, seg_index)
+                         codecs, is_sidecar_path, job_id_for_path,
+                         seg_index)
 
 
 def _known_patterns() -> tuple[str, ...]:
@@ -118,7 +132,8 @@ class ReplayStats:
     bytes_decoded: int = 0       # segment bytes actually decoded (FCS)
     bytes_skipped: int = 0       # segment bytes hopped over by pushdown
     seconds: float = 0.0
-    job_workers: int = 1         # worker threads the replay actually used
+    job_workers: int = 1         # workers the replay actually used
+    worker_kind: str = "serial"  # "serial" | "thread" | "process"
     per_job: dict = field(default_factory=dict)   # job_id -> events
 
     @property
@@ -145,12 +160,14 @@ class FleetReplayer:
 
     ``chunk_bytes``/``max_workers``/``executor``/``serial_below`` tune
     the per-file chunk decode (JSONL); ``job_workers`` caps the per-job
-    worker threads of :meth:`replay_dir` (``None`` = auto: one per job
-    up to the core count on boxes with enough cores to overlap the
-    GIL-releasing numpy windows, serial otherwise; ``1`` = serial; an
-    explicit ``N`` is always honored); ``prefetch`` bounds how many
-    decoded chunks each job may queue ahead of its diagnosis (``0``
-    disables the pipeline and decodes inline).
+    workers of :meth:`replay_dir` (``None`` = auto; ``1`` = serial; an
+    explicit ``N`` is always honored); ``worker_kind`` picks what a
+    worker IS — ``"thread"`` (default; auto stays serial below 4 cores,
+    where GIL convoying beats the overlap) or ``"process"``
+    (``repro.fleet.ipc``; auto uses one worker per core from 2 cores up,
+    since processes don't convoy); ``prefetch`` bounds how many decoded
+    chunks each job may queue ahead of its diagnosis (``0`` disables
+    the pipeline and decodes inline).
 
     ``predicate`` (a :class:`repro.store.Predicate`) pushes segment
     pruning into the decode: FCS v3 segments whose stats prove no row
@@ -167,14 +184,20 @@ class FleetReplayer:
                  executor: str = "thread",
                  serial_below: Optional[int] = None,
                  job_workers: Optional[int] = None,
+                 worker_kind: str = "thread",
                  prefetch: int = 2,
                  predicate: Optional[Predicate] = None):
+        if worker_kind not in ("thread", "process"):
+            raise ValueError(
+                f"worker_kind must be 'thread' or 'process', "
+                f"got {worker_kind!r}")
         self.mux = mux
         self.chunk_bytes = chunk_bytes
         self.max_workers = max_workers
         self.executor = executor
         self.serial_below = serial_below
         self.job_workers = job_workers
+        self.worker_kind = worker_kind
         self.prefetch = prefetch
         self.predicate = predicate
 
@@ -236,11 +259,13 @@ class FleetReplayer:
         return events, skipped
 
     def _replay_job(self, job_id: str, paths: list[str],
-                    stats: ReplayStats) -> ReplayStats:
+                    stats: ReplayStats, on_file=None) -> ReplayStats:
         """One job's full pipeline: every rotated/renamed piece in
         order, decode -> step-aligned ingest -> incremental diagnosis on
         that job's (lock-isolated) engine.  Accounting lands on the
-        caller-supplied ``stats`` — job-local in the parallel path."""
+        caller-supplied ``stats`` — job-local in the parallel path.
+        ``on_file`` fires after each file — the process worker ships
+        accumulated anomalies there, for incremental backpressure."""
         for path in paths:
             pre_corrupt = stats.corrupt_files
             try:
@@ -248,6 +273,9 @@ class FleetReplayer:
             except CodecError:
                 stats.corrupt_files += 1
                 continue
+            finally:
+                if on_file is not None:
+                    on_file()
             if ev == 0 and stats.corrupt_files > pre_corrupt:
                 continue               # nothing usable before the corruption
             stats.files += 1
@@ -256,51 +284,71 @@ class FleetReplayer:
             stats.per_job[job_id] = stats.per_job.get(job_id, 0) + ev
         return stats
 
-    def _resolve_job_workers(self, n_jobs: int,
-                             override: Optional[int]) -> int:
+    def _resolve_job_workers(self, n_jobs: int, override: Optional[int],
+                             kind: str = "thread") -> int:
         w = override if override is not None else self.job_workers
         if w is None:
             cores = os.cpu_count() or 1
-            # Auto mode is conservative: per-step diagnosis interleaves
-            # short GIL-held Python with GIL-releasing numpy windows, so
-            # worker threads only overlap usefully when there are enough
-            # cores for the windows to land on; measured on a 2-core box
-            # the convoy cost makes even independent replays ~0.5-0.8x.
-            # Explicit ``job_workers=N`` always honors the caller.
-            w = 1 if cores < 4 else cores
+            if kind == "process":
+                # processes don't convoy on the GIL: one worker per core
+                # wins from 2 cores up (spawn cost amortizes over any
+                # real replay; tiny dirs stay near-serial anyway)
+                w = cores
+            else:
+                # Thread auto mode is conservative: per-step diagnosis
+                # interleaves short GIL-held Python with GIL-releasing
+                # numpy windows, so worker threads only overlap usefully
+                # when there are enough cores for the windows to land
+                # on; measured on a 2-core box the convoy cost makes
+                # even independent replays ~0.5-0.8x.  Explicit
+                # ``job_workers=N`` always honors the caller.
+                w = 1 if cores < 4 else cores
         return max(1, min(w, n_jobs))
 
     def replay_dir(self, directory: str, *, pattern: Optional[str] = None,
                    flush: bool = True,
-                   job_workers: Optional[int] = None) -> ReplayStats:
+                   job_workers: Optional[int] = None,
+                   worker_kind: Optional[str] = None) -> ReplayStats:
         """Replay every trace file in ``directory`` (all registered
         formats when ``pattern`` is None), then flush the fleet so
         trailing steps and hangs are diagnosed.  Rotated spill files
         (``job.fcs``, ``job.seg001.fcs``, …) replay into one job, in
-        order; files that fail to decode are skipped and counted.
+        order; files that fail to decode are skipped and counted;
+        archive sidecars (rollup caches, telemetry exports) are never
+        treated as trace logs.
 
         Multi-job directories replay in PARALLEL, one worker per job
         (capped by ``job_workers``/cores), each worker owning its job's
-        decode -> ingest -> diagnose chain; anomalies and stats are
-        byte-equivalent to a ``job_workers=1`` serial replay (see module
-        docstring for how ordering is pinned).  Anomalies are left in
-        the multiplexer's stream for the caller to ``poll()``.  Returns
-        throughput stats."""
+        decode -> ingest -> diagnose chain — worker threads by default,
+        worker PROCESSES with ``worker_kind="process"`` (the GIL-free
+        path; see ``repro.fleet.ipc``).  Anomalies and stats are
+        byte-equivalent to a ``job_workers=1`` serial replay either way
+        (see module docstring for how ordering is pinned).  Anomalies
+        are left in the multiplexer's stream for the caller to
+        ``poll()``.  Returns throughput stats."""
+        kind = worker_kind if worker_kind is not None else self.worker_kind
+        if kind not in ("thread", "process"):
+            raise ValueError(
+                f"worker_kind must be 'thread' or 'process', got {kind!r}")
         patterns = (pattern,) if pattern is not None else _known_patterns()
         # numeric rotation order: lexicographic sorting would put
         # seg1000 before seg999 on months-long streams
         paths = sorted({p for pat in patterns
-                        for p in glob.glob(os.path.join(directory, pat))},
+                        for p in glob.glob(os.path.join(directory, pat))
+                        if not is_sidecar_path(p)},
                        key=lambda p: (job_id_for_path(p), seg_index(p), p))
         groups: dict[str, list[str]] = {}
         for p in paths:
             groups.setdefault(job_id_for_path(p), []).append(p)
-        workers = self._resolve_job_workers(len(groups), job_workers)
-        stats = ReplayStats(job_workers=workers)
+        workers = self._resolve_job_workers(len(groups), job_workers, kind)
+        stats = ReplayStats(job_workers=workers,
+                            worker_kind=kind if workers > 1 else "serial")
         t0 = time.perf_counter()
         if workers <= 1:
             for job_id, jpaths in groups.items():
                 self._replay_job(job_id, jpaths, stats)
+        elif kind == "process":
+            self._replay_dir_process(groups, workers, stats)
         else:
             # registration order must not depend on which worker ingests
             # first: it decides flush/finalize order and fleet-tier
@@ -330,6 +378,70 @@ class FleetReplayer:
         stats.per_job = dict(sorted(stats.per_job.items()))
         self._publish_telemetry(stats)
         return stats
+
+    def _replay_dir_process(self, groups: dict, workers: int,
+                            stats: ReplayStats) -> None:
+        """Process-sharded replay: each job's pipeline runs in a worker
+        process (``repro.fleet.ipc``); the parent re-pushes shipped
+        anomalies as they arrive (bounded queues give backpressure) and,
+        after the join, merges everything back DETERMINISTICALLY in
+        sorted-path group order — intern tables, telemetry, per-job end
+        state, stats — then replays the recorded fleet-tier observation
+        sequence through ``resolve_fleet_tier`` in the same two phases
+        serial replay produces: ingest-phase observations in group
+        order, flush-phase observations in registration order."""
+        from repro.fleet.ipc import TASK_REPLAY, ProcessWorkerPool
+        mux = self.mux
+        for job_id in groups:
+            mux.add_job(job_id)
+        record_fleet = bool(mux.fleet_detectors)
+        init = {
+            "history": mux.history,
+            "fleet": {"watermark_delay": mux.cfg.watermark_delay,
+                      "backend": mux.cfg.backend,
+                      "max_pending_rows": mux.cfg.max_pending_rows},
+            "replay": {"chunk_bytes": self.chunk_bytes,
+                       "max_workers": self.max_workers,
+                       "executor": self.executor,
+                       "serial_below": self.serial_below,
+                       "prefetch": self.prefetch,
+                       "predicate": self.predicate},
+        }
+
+        def _on_anomalies(job_id: str, items) -> None:
+            # stream + counter are internally locked; per-job push order
+            # is the worker's push order (FIFO queue), which is all the
+            # drain sort needs for scheduling-independent output
+            job = mux.job(job_id)
+            for ts, a in items:
+                mux.stream.push(job_id, a, ts)
+                job.count_anomaly()
+
+        pool = ProcessWorkerPool(workers, init)
+        try:
+            for job_id, jpaths in groups.items():
+                pool.submit((TASK_REPLAY, job_id, jpaths,
+                             mux.job(job_id).engine.cfg, record_fleet))
+            results = pool.drain(on_anomalies=_on_anomalies)
+        finally:
+            pool.close()
+        missing = [j for j in groups if j not in results]
+        if missing:     # drain() raises on worker errors; belt + braces
+            raise RuntimeError(
+                f"fleet replay workers returned no result for {missing}")
+        for job_id in groups:
+            res = results[job_id]
+            mux.interner.merge_tables(res["names"], res["groups"])
+            mux.telemetry.absorb(res["telemetry"])
+            mux.restore_job_state(job_id, res["state"])
+            stats.merge(res["stats"])
+        for job_id in groups:
+            mux.buffer_fleet_observations(job_id, results[job_id]["obs_ingest"])
+        mux.resolve_fleet_tier(job_order=list(groups))
+        reg_order = [j.job_id for j in mux.jobs]
+        for job_id in groups:
+            mux.buffer_fleet_observations(job_id, results[job_id]["obs_flush"])
+        mux.resolve_fleet_tier(job_order=reg_order)
 
     def _publish_telemetry(self, stats: ReplayStats) -> None:
         """Land one replay's accounting in the multiplexer's telemetry

@@ -58,6 +58,19 @@ class SharedInterner:
             self.groups.append(group)
         return i
 
+    def merge_tables(self, names, groups) -> None:
+        """Fold another interner's tables in (a replay worker process
+        built its own; the parent adopts every name/group it saw).  Ids
+        are NOT preserved — merging interns each string in table order,
+        which is deterministic as long as workers' tables are merged in
+        a deterministic job order (the replayer merges in sorted-path
+        group order), so repeated runs produce identical fleet tables."""
+        with self._lock:
+            for nm in names:
+                self.intern_name(nm)
+            for gm in groups:
+                self.intern_group(gm)
+
     def adopt(self, batch: EventBatch) -> EventBatch:
         if batch.names is self.names and batch.groups is self.groups:
             return batch
@@ -97,8 +110,11 @@ class StepPartitionedStore:
     def __init__(self, interner: Optional[SharedInterner] = None):
         self.interner = interner or SharedInterner()
         self._by_step: dict[int, list[EventBatch]] = {}
+        self._step_rows: dict[int, int] = {}  # step -> rows buffered
+        self.buffered_rows = 0          # total rows currently held
         self._rank_seen = np.zeros(0, bool)   # scatter beats np.unique here
         self._num_ranks = 0
+        self._ranks_floor = 0           # restored summary floor (see below)
         self._ranks_dirty = False
         self.max_step_seen = -1
         self.last_ts = 0.0              # max end_ts observed (event time)
@@ -111,7 +127,7 @@ class StepPartitionedStore:
         if self._ranks_dirty:
             self._num_ranks = int(np.count_nonzero(self._rank_seen))
             self._ranks_dirty = False
-        return self._num_ranks
+        return max(self._num_ranks, self._ranks_floor)
 
     def append(self, batch: EventBatch) -> dict[int, int]:
         """Adopt + split one chunk; returns ``step -> rows buffered`` so
@@ -141,6 +157,8 @@ class StepPartitionedStore:
                 self.nostep_events += len(b)
             else:
                 self._by_step.setdefault(s0, []).append(b)
+                self._step_rows[s0] = self._step_rows.get(s0, 0) + len(b)
+                self.buffered_rows += len(b)
                 touched[s0] = len(b)
                 if s0 > self.max_step_seen:
                     self.max_step_seen = s0
@@ -152,6 +170,8 @@ class StepPartitionedStore:
                 self.nostep_events += rows.size
                 continue
             self._by_step.setdefault(s, []).append(b.take(rows))
+            self._step_rows[s] = self._step_rows.get(s, 0) + rows.size
+            self.buffered_rows += rows.size
             touched[s] = rows.size
             if s > self.max_step_seen:
                 self.max_step_seen = s
@@ -168,7 +188,37 @@ class StepPartitionedStore:
         """``step_batch`` + release the buffered slices."""
         out = self.step_batch(step)
         del self._by_step[step]
+        self.buffered_rows -= self._step_rows.pop(step, 0)
         return out
 
     def drop_step(self, step: int) -> None:
         self._by_step.pop(step, None)
+        self.buffered_rows -= self._step_rows.pop(step, 0)
+
+    # ------------------------------------------------------------------ #
+    # process-sharded replay: mirror a worker store's summary facts
+    # ------------------------------------------------------------------ #
+    def summary(self) -> dict:
+        """Picklable facts a replay worker ships back so the parent's
+        store mirror answers ``stats()``/hang/flush questions exactly as
+        the worker's would.  Buffered slices are NOT shipped — the
+        worker flushed before summarizing, so there are none."""
+        return {
+            "events_total": self.events_total,
+            "nostep_events": self.nostep_events,
+            "num_ranks": self.num_ranks,
+            "max_step_seen": self.max_step_seen,
+            "last_ts": self.last_ts,
+            "hang_stacks": dict(self.hang_stacks),
+        }
+
+    def restore_summary(self, s: dict) -> None:
+        """Fold a worker's :meth:`summary` into this (parent-side) store.
+        Rank identities don't cross the boundary, so the count lands as a
+        floor that later direct ingest can only raise."""
+        self.events_total += int(s["events_total"])
+        self.nostep_events += int(s["nostep_events"])
+        self._ranks_floor = max(self._ranks_floor, int(s["num_ranks"]))
+        self.max_step_seen = max(self.max_step_seen, int(s["max_step_seen"]))
+        self.last_ts = max(self.last_ts, float(s["last_ts"]))
+        self.hang_stacks.update(s["hang_stacks"])

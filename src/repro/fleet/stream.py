@@ -80,5 +80,16 @@ class AnomalyStream:
         out.sort(key=lambda a: (a.ts, a.job_id, a.seq))
         return out
 
+    def drain_raw(self) -> list[FleetAnomaly]:
+        """Pending anomalies in ARRIVAL order, no merge sort.  A replay
+        worker process ships these across the IPC boundary; the parent
+        re-pushes them onto ITS stream, which preserves per-job order —
+        the only order that matters, since :meth:`drain`'s ``(ts,
+        job_id, seq)`` sort already makes cross-job interleave
+        scheduling-independent."""
+        with self._lock:
+            out, self._pending = self._pending, []
+        return out
+
     def __len__(self) -> int:
         return len(self._pending)

@@ -14,13 +14,15 @@ from repro.store.base import (CodecError, TraceCodec, codec_for_path,
                               codecs, get_codec, register_codec,
                               sniff_format)
 from repro.store.compress import have_zstd
-from repro.store.fcs import (FcsCodec, FcsV2Codec, FcsV3Codec, read_fcs,
-                             segment_stats, write_fcs)
+from repro.store.fcs import (FcsCodec, FcsV2Codec, FcsV3Codec,
+                             decode_batch_bytes, encode_batch_bytes,
+                             read_fcs, segment_stats, write_fcs)
 from repro.store.jsonl import (JsonlCodec, iter_jsonl_chunks, read_jsonl,
                                read_jsonl_chunked)
-from repro.store.stats import (SEVERITY_KINDS, Predicate, ScanStats,
-                               SegmentStats)
-from repro.store.writer import (SegmentedTraceWriter, job_id_for_path,
+from repro.store.stats import (SEVERITY_KINDS, STAT_COLUMNS, Predicate,
+                               ScanStats, SegmentStats)
+from repro.store.writer import (ROLLUP_SUFFIX, SegmentedTraceWriter,
+                                is_sidecar_path, job_id_for_path,
                                 seg_index, seg_path)
 
 JSONL = register_codec(JsonlCodec())
@@ -54,7 +56,8 @@ __all__ = [
     "register_codec", "get_codec", "codecs", "codec_for_path",
     "sniff_format", "read_trace", "write_trace", "iter_trace_chunks",
     "read_jsonl", "read_jsonl_chunked", "iter_jsonl_chunks", "read_fcs",
-    "write_fcs", "segment_stats", "Predicate", "ScanStats",
-    "SegmentStats", "SEVERITY_KINDS", "SegmentedTraceWriter", "seg_path",
-    "seg_index", "job_id_for_path",
+    "write_fcs", "encode_batch_bytes", "decode_batch_bytes",
+    "segment_stats", "Predicate", "ScanStats", "SegmentStats",
+    "SEVERITY_KINDS", "STAT_COLUMNS", "SegmentedTraceWriter", "seg_path",
+    "seg_index", "job_id_for_path", "is_sidecar_path", "ROLLUP_SUFFIX",
 ]

@@ -83,6 +83,21 @@ _PAIR_I = struct.Struct("<qq")
 # issue_ts / start_ts / end_ts / flops)
 FLOAT_STAT_COLS = frozenset((3, 4, 5, 7))
 
+# batch attribute name -> fcs column id, for value-predicate pushdown
+# (``Predicate(columns={"flops": (lo, hi)})``).  Mirrors the real-column
+# prefix of fcs._COLUMNS; the sparse extra index columns are internal.
+STAT_COLUMNS: dict[str, int] = {
+    "kind": 0, "name_id": 1, "rank": 2, "issue_ts": 3, "start_ts": 4,
+    "end_ts": 5, "step": 6, "flops": 7, "nbytes": 8, "tokens": 9,
+    "group_id": 10,
+}
+
+# null sentinels per value column: rows holding the sentinel carry no
+# value, so they can never satisfy a bound (mirrors the exclusions
+# compute_stats applies when building the per-column min/max)
+_NAN_NULL_COLS = frozenset(("flops",))
+_INT_NULL_COLS = frozenset(("nbytes", "tokens"))
+
 
 def stats_size(ncols: int) -> int:
     return STATS_HDR.size + ncols * 16
@@ -245,6 +260,15 @@ class Predicate:
     ``kinds`` an event-kind set; ``severity`` names a class from
     :data:`SEVERITY_KINDS` and unions into ``kinds``.
 
+    ``columns`` adds per-column VALUE bounds keyed by batch attribute
+    name (see :data:`STAT_COLUMNS`), e.g. ``{"flops": (1e12, None)}`` —
+    inclusive ``(lo, hi)``, either end ``None`` for open.  Rows holding
+    a column's null sentinel (NaN flops, missing bytes/tokens) never
+    match a bound on it, mirroring the null exclusion the v3 per-column
+    min/max already applies — which is what makes the segment-level
+    prune sound: a column absent from ``col_present`` has no non-null
+    row, so the whole segment is skipped.
+
     Two faces, kept consistent by construction: :meth:`may_match` is
     the CONSERVATIVE segment test over a stats block (false only when
     no row can possibly match), :meth:`row_mask`/:meth:`filter` the
@@ -255,11 +279,23 @@ class Predicate:
     ranks: Optional[Sequence[int]] = None
     kinds: Optional[Sequence] = None
     severity: Optional[str] = None
+    columns: Optional[dict] = None
     _kind_mask: int = field(init=False, default=0, repr=False)
     _rank_set: Optional[np.ndarray] = field(init=False, default=None,
                                             repr=False)
+    _col_bounds: dict = field(init=False, default_factory=dict, repr=False)
 
     def __post_init__(self):
+        if self.columns:
+            for name, bounds in self.columns.items():
+                if name not in STAT_COLUMNS:
+                    raise ValueError(
+                        f"unknown predicate column {name!r}; known: "
+                        f"{sorted(STAT_COLUMNS)}")
+                lo, hi = bounds
+                if lo is None and hi is None:
+                    continue
+                self._col_bounds[name] = (lo, hi)
         ks = list(self.kinds) if self.kinds else []
         if self.severity is not None:
             try:
@@ -276,7 +312,8 @@ class Predicate:
     @property
     def empty(self) -> bool:
         return (self.step_range is None and self.time_range is None
-                and self._rank_set is None and self._kind_mask == 0)
+                and self._rank_set is None and self._kind_mask == 0
+                and not self._col_bounds)
 
     # ------------------------- segment test -------------------------- #
     def may_match(self, stats: Optional[SegmentStats]) -> bool:
@@ -303,6 +340,14 @@ class Predicate:
                 return False
         if self._kind_mask and not (stats.kind_bits & self._kind_mask):
             return False
+        for name, (lo, hi) in self._col_bounds.items():
+            cr = stats.column_range(STAT_COLUMNS[name])
+            if cr is None:          # no non-null value in any row
+                return False
+            if lo is not None and cr[1] < lo:
+                return False
+            if hi is not None and cr[0] > hi:
+                return False
         return True
 
     # --------------------------- row filter --------------------------- #
@@ -320,6 +365,20 @@ class Predicate:
             codes = [c for c in range(len(EventKind))
                      if (self._kind_mask >> c) & 1]
             m &= np.isin(batch.kind, np.asarray(codes, batch.kind.dtype))
+        for name, (lo, hi) in self._col_bounds.items():
+            vals = getattr(batch, name)
+            if name in _NAN_NULL_COLS:
+                valid = ~np.isnan(vals)
+            elif name in _INT_NULL_COLS:
+                valid = vals != NO_INT
+            else:
+                valid = None
+            cm = np.ones(len(batch), bool) if valid is None else valid
+            if lo is not None:
+                cm = cm & (vals >= lo)
+            if hi is not None:
+                cm = cm & (vals <= hi)
+            m &= cm
         return m
 
     def filter(self, batch):

@@ -20,6 +20,22 @@ from repro.store.base import TraceCodec, codec_for_path, get_codec
 
 _SEG_RE = re.compile(r"\.seg(\d{3,})$")
 
+# non-trace companions that live next to trace files and can collide
+# with codec extension globs (JSONL claims ``*.json``): the archive's
+# persistent rollup cache (``<trace>.rollup.json``) and its telemetry
+# exports (``telemetry-NNN.json``)
+_TELEMETRY_RE = re.compile(r"^telemetry-\d+\.json$")
+
+ROLLUP_SUFFIX = ".rollup.json"
+
+
+def is_sidecar_path(path: str) -> bool:
+    """True for archive sidecar files (rollup caches, telemetry exports)
+    that must not be treated as trace logs even when a codec's extension
+    glob matches them."""
+    base = os.path.basename(path)
+    return base.endswith(ROLLUP_SUFFIX) or bool(_TELEMETRY_RE.match(base))
+
 
 def seg_path(base_path: str, index: int) -> str:
     """Path of rotation segment ``index`` (0 = the base path itself)."""

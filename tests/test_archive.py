@@ -426,3 +426,145 @@ def test_query_anomalies_and_fleet_weather(tmp_path, world):
     assert w["jobs"]["job-b"]["throughput_trend_pct"] < -5.0
     txt = format_fleet_weather(w)
     assert "job-b" in txt and "fleet: 2 jobs" in txt
+
+
+# --------------------------------------------------------------------- #
+# value-predicate pushdown (per-column bounds)
+# --------------------------------------------------------------------- #
+def test_value_predicate_unit_semantics():
+    with pytest.raises(ValueError, match="unknown predicate column"):
+        Predicate(columns={"bogus": (0, 1)})
+    assert Predicate(columns={}).empty
+    assert Predicate(columns={"flops": (None, None)}).empty
+    assert not Predicate(columns={"flops": (1e9, None)}).empty
+
+    cmin, cmax = [0.0] * 11, [0.0] * 11
+    cmin[7], cmax[7] = 2e9, 8e9
+    st = SegmentStats(offset=0, seg_len=100, n_rows=5, version=3,
+                      has_stats=True, kind_bits=1, col_present=1 << 7,
+                      col_min=tuple(cmin), col_max=tuple(cmax))
+    assert Predicate(columns={"flops": (8e9, None)}).may_match(st)
+    assert not Predicate(columns={"flops": (8.1e9, None)}).may_match(st)
+    assert Predicate(columns={"flops": (None, 2e9)}).may_match(st)
+    assert not Predicate(columns={"flops": (None, 1.9e9)}).may_match(st)
+    # column absent from the stats block (all-null) => cannot match:
+    # the row filter below would exclude every null row anyway
+    assert not Predicate(columns={"nbytes": (0, 1)}).may_match(st)
+
+    # exact row filter is null-aware: rows without the value never match
+    b = EventBatch.from_events([
+        TraceEvent(EventKind.KERNEL_COMPUTE, "mm", rank=1, issue_ts=0.0,
+                   start_ts=0.0, end_ts=1.0, step=0, meta={"flops": 4e9}),
+        TraceEvent(EventKind.KERNEL_COMM, "ar", rank=2, issue_ts=0.0,
+                   start_ts=0.0, end_ts=1.0, step=0, meta={"bytes": 128}),
+    ])
+    got = Predicate(columns={"flops": (0.0, None)}).filter(b)
+    assert [got.names[i] for i in got.name_id] == ["mm"]
+    got = Predicate(columns={"nbytes": (0, 256)}).filter(b)
+    assert [got.names[i] for i in got.name_id] == ["ar"]
+    assert len(Predicate(columns={"flops": (5e9, None)}).filter(b)) == 0
+
+
+def test_value_pushdown_byte_equivalent_and_prunes(tmp_path, world):
+    prog, _ = world
+    d = str(tmp_path / "vals")
+    _write_archive(d, prog, steps=6, jobs=("job-a",))
+    ar = TraceArchive(d)
+    full = ar.query_events("job-a")
+    finite = full.flops[~np.isnan(full.flops)]
+    assert finite.size > 0
+    cut = float(np.median(finite))
+
+    for cols in ({"flops": (cut, None)}, {"flops": (None, cut)},
+                 {"nbytes": (1, None)}):
+        pruned, scan = ar.query_events("job-a", columns=cols,
+                                       with_scan=True)
+        oracle, scan_full = ar.query_events("job-a", columns=cols,
+                                            pushdown=False, with_scan=True)
+        _assert_batches_byte_equal(pruned, oracle)
+        assert scan_full.segments_skipped == 0
+        assert scan.bytes_decoded <= scan_full.bytes_decoded
+
+    # an impossible bound prunes EVERY v3 segment on stats alone
+    none, scan = ar.query_events("job-a", columns={"flops": (1e30, None)},
+                                 with_scan=True)
+    assert len(none) == 0
+    assert scan.segments_skipped == scan.segments > 0
+    assert scan.bytes_decoded == 0
+
+
+# --------------------------------------------------------------------- #
+# persistent rollup sidecars
+# --------------------------------------------------------------------- #
+def test_rollup_disk_cache_warm_across_instances(tmp_path, world):
+    prog, _ = world
+    d = str(tmp_path / "disk")
+    _write_archive(d, prog, steps=4, jobs=("job-a",))
+    ar1 = TraceArchive(d)
+    curve = ar1.query_metrics("job-a", metric="throughput")
+    assert [s for s, _ in curve] == [0, 1, 2, 3]
+    sidecars = [p for p in os.listdir(d)
+                if p.endswith(store.ROLLUP_SUFFIX)]
+    assert sidecars                       # one per rotated piece
+
+    # a COLD instance answers from the sidecars: zero rollup builds
+    ar2 = TraceArchive(d)
+    assert ar2.query_metrics("job-a", metric="throughput") == curve
+    assert ar2.telemetry.counter("archive.rollup_builds").value == 0
+    assert ar2.telemetry.counter("archive.rollup_disk_hits").value \
+        == len(sidecars)
+    # sidecars are data ABOUT traces, not traces
+    assert ar2.jobs == ["job-a"]
+
+    # append to one piece -> its fingerprint is stale -> ONE rebuild,
+    # the other sidecars still serve from disk
+    b = ClusterSimulator(N, prog, seed=78).run_batch(5)
+    seg = _per_step_segments(b)[-1]
+    target = sorted(p for p in os.listdir(d) if p.endswith(".fcs3"))[0]
+    store.write_fcs(seg, os.path.join(d, target), version=3)
+    ar3 = TraceArchive(d)
+    curve3 = ar3.query_metrics("job-a", metric="throughput")
+    assert [s for s, _ in curve3] == [0, 1, 2, 3, 4]
+    assert ar3.telemetry.counter("archive.rollup_builds").value == 1
+    assert ar3.telemetry.counter("archive.rollup_disk_hits").value \
+        == len(sidecars) - 1
+
+    # opt-out: no sidecars written at all
+    d2 = str(tmp_path / "nodisk")
+    _write_archive(d2, prog, steps=3, jobs=("job-a",))
+    ar4 = TraceArchive(d2, persist_rollups=False)
+    ar4.query_metrics("job-a", metric="throughput")
+    assert not [p for p in os.listdir(d2)
+                if p.endswith(store.ROLLUP_SUFFIX)]
+
+
+def test_rollup_sidecar_corrupt_or_stale_is_ignored(tmp_path, world):
+    prog, _ = world
+    d = str(tmp_path / "corrupt")
+    _write_archive(d, prog, steps=3, jobs=("job-a",))
+    ar1 = TraceArchive(d)
+    curve = ar1.query_metrics("job-a", metric="throughput")
+    side = sorted(p for p in os.listdir(d)
+                  if p.endswith(store.ROLLUP_SUFFIX))[0]
+    with open(os.path.join(d, side), "w") as f:
+        f.write("{ not json")
+    ar2 = TraceArchive(d)                  # garbage sidecar -> rebuild
+    assert ar2.query_metrics("job-a", metric="throughput") == curve
+    assert ar2.telemetry.counter("archive.rollup_builds").value == 1
+
+
+def test_rollup_sidecars_ignored_by_replay(tmp_path, world):
+    prog, hist = world
+    d = str(tmp_path / "side")
+    _write_archive(d, prog, steps=3, jobs=("job-a",))
+    TraceArchive(d).query_metrics("job-a", metric="throughput")
+    assert [p for p in os.listdir(d) if p.endswith(store.ROLLUP_SUFFIX)]
+    mux = FleetMultiplexer(FleetConfig(watermark_delay=1), history=hist)
+    mux.add_job("job-a", EngineConfig(backend="dense-train", num_ranks=N))
+    stats = FleetReplayer(mux).replay_dir(d)
+    # only the trace pieces replayed; the .rollup.json sidecars (which
+    # the JSONL codec's *.json glob would otherwise claim) are invisible
+    assert set(stats.per_job) == {"job-a"}
+    assert stats.files == len([p for p in os.listdir(d)
+                               if p.endswith(".fcs3")])
+    assert stats.skipped_lines == 0 and stats.corrupt_files == 0

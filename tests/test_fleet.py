@@ -326,21 +326,31 @@ def _write_mixed_fleet_logs(logdir, prog):
     b = ClusterSimulator(N, prog, seed=14).run_batch(5)
     trace_store.write_fcs(b, os.path.join(logdir, "job-d.fcs"))
     oracle["job-d"] = b
+
+    # job-e: FCS v3 (per-segment stats block), one segment per step
+    b = ClusterSimulator(N, prog, seed=15,
+                         injections=SCENARIOS["gc"]).run_batch(5)
+    ep = os.path.join(logdir, "job-e.fcs3")
+    for c in _step_chunks(b):
+        trace_store.write_fcs(c, ep, version=3)
+    oracle["job-e"] = b
     return oracle
 
 
-def _replay(logdir, store, fleet_cfg=None, topo=None, **replayer_kw):
+def _replay(logdir, store, fleet_cfg=None, topo=None, worker_kind=None,
+            **replayer_kw):
     mux = FleetMultiplexer(fleet_cfg or FleetConfig(watermark_delay=1),
                            history=store)
     # register in REVERSE order on purpose: equivalence must not lean on
     # registration order matching the replayer's sorted-path order
-    for job in ("job-d", "job-c", "job-b", "job-a"):
+    for job in ("job-e", "job-d", "job-c", "job-b", "job-a"):
         mux.add_job(job, EngineConfig(backend="dense-train", num_ranks=N))
         if topo:
             mux.set_topology(job, **topo.get(job, {}))
-    stats = FleetReplayer(mux, **replayer_kw).replay_dir(logdir)
+    stats = FleetReplayer(mux, **replayer_kw).replay_dir(
+        logdir, worker_kind=worker_kind)
     return stats, [(fa.job_id, fa.origin, _sig(fa.anomaly))
-                   for fa in mux.poll()]
+                   for fa in mux.poll()], mux
 
 
 def test_parallel_replay_matches_serial_on_mixed_dir(world, tmp_path):
@@ -351,8 +361,8 @@ def test_parallel_replay_matches_serial_on_mixed_dir(world, tmp_path):
     logdir = str(tmp_path / "logs")
     oracle = _write_mixed_fleet_logs(logdir, prog)
 
-    s1, a1 = _replay(logdir, store, job_workers=1)
-    s4, a4 = _replay(logdir, store, job_workers=4)
+    s1, a1, _ = _replay(logdir, store, job_workers=1)
+    s4, a4, _ = _replay(logdir, store, job_workers=4)
     assert s4.job_workers == 4 and s1.job_workers == 1
     assert a4 == a1
     assert a1                                 # the scenarios actually alarm
@@ -367,8 +377,9 @@ def test_parallel_replay_matches_serial_on_mixed_dir(world, tmp_path):
     assert s4.per_job["job-b"] == len(oracle["job-b"])
     assert s4.per_job["job-c"] == len(oracle["job-c"])  # leading segment
     assert s4.per_job["job-d"] == len(oracle["job-d"])
+    assert s4.per_job["job-e"] == len(oracle["job-e"])  # FCS v3
     # and prefetch=0 (no pipeline) is equivalent too
-    s0, a0 = _replay(logdir, store, job_workers=4, prefetch=0)
+    s0, a0, _ = _replay(logdir, store, job_workers=4, prefetch=0)
     assert a0 == a1 and s0.per_job == s1.per_job
 
 
@@ -396,10 +407,10 @@ def test_parallel_replay_fleet_tier_matches_serial(world, tmp_path):
         return FleetConfig(watermark_delay=1,
                            fleet_detectors=["cross_job_failslow"])
 
-    s1, a1 = _replay(logdir, store, fleet_cfg=cfg(), topo=topo,
-                     job_workers=1)
-    s4, a4 = _replay(logdir, store, fleet_cfg=cfg(), topo=topo,
-                     job_workers=4)
+    s1, a1, _ = _replay(logdir, store, fleet_cfg=cfg(), topo=topo,
+                        job_workers=1)
+    s4, a4, _ = _replay(logdir, store, fleet_cfg=cfg(), topo=topo,
+                        job_workers=4)
     assert a4 == a1
     fleet_emissions = [x for x in a1 if x[1] == "fleet"]
     assert len(fleet_emissions) >= 2          # the correlator actually fired
@@ -458,6 +469,226 @@ def test_replay_stats_merge():
     assert (a.files, a.events, a.skipped_lines, a.corrupt_files) == \
         (3, 15, 1, 2)
     assert a.per_job == {"a": 10, "b": 5}
+
+
+# --------------------------------------------------------------------- #
+# process-sharded replay: FCS-over-IPC job workers (ISSUE 8)            #
+# --------------------------------------------------------------------- #
+
+def test_process_replay_matches_serial_on_mixed_dir(world, tmp_path):
+    """The tentpole gate: the mixed JSONL / rotated-FCS / truncated-v2 /
+    FCS-v3 directory replayed with PROCESS workers must produce
+    byte-identical anomalies, stats, and per-job end state to serial."""
+    prog, store = world
+    logdir = str(tmp_path / "logs")
+    oracle = _write_mixed_fleet_logs(logdir, prog)
+
+    s1, a1, m1 = _replay(logdir, store, job_workers=1)
+    sp, ap, mp_ = _replay(logdir, store, job_workers=2,
+                          worker_kind="process")
+    assert sp.worker_kind == "process" and sp.job_workers == 2
+    assert s1.worker_kind == "serial"
+    assert ap == a1
+    assert a1                                 # the scenarios actually alarm
+    assert sp.events == s1.events
+    assert sp.per_job == s1.per_job
+    assert list(sp.per_job) == sorted(sp.per_job)     # deterministic order
+    assert sp.files == s1.files
+    assert sp.corrupt_files == s1.corrupt_files == 1  # job-c's torn tail
+    assert sp.skipped_lines == s1.skipped_lines == 0
+    assert sp.per_job["job-e"] == len(oracle["job-e"])   # FCS v3 job
+    # per-job end state mirrored back from the workers == serial state
+    assert mp_.stats() == m1.stats()
+
+
+def test_process_replay_fleet_tier_matches_serial(world, tmp_path):
+    """The deferred-and-replayed fleet tier: cross-job INFRASTRUCTURE
+    reclassifications from process workers must be byte-identical to
+    serial, with jobs registered in reverse order."""
+    prog, store = world
+    from repro import store as trace_store
+    logdir = str(tmp_path / "logs")
+    os.makedirs(logdir)
+    for i, job in enumerate(("job-a", "job-b", "job-c")):
+        b = ClusterSimulator(N, prog, seed=20 + i,
+                             injections=SCENARIOS["jitter"]).run_batch(6)
+        trace_store.write_fcs(b, os.path.join(logdir, f"{job}.fcs"))
+    trace_store.write_fcs(
+        ClusterSimulator(N, prog, seed=30).run_batch(6),
+        os.path.join(logdir, "job-d.fcs"))
+    topo = {j: {"rack": "rack0", "switch": "sw0"}
+            for j in ("job-a", "job-b", "job-c")}
+    topo["job-d"] = {"rack": "rack9", "switch": "sw9"}
+
+    def cfg():
+        return FleetConfig(watermark_delay=1,
+                           fleet_detectors=["cross_job_failslow"])
+
+    s1, a1, _ = _replay(logdir, store, fleet_cfg=cfg(), topo=topo,
+                        job_workers=1)
+    sp, ap, _ = _replay(logdir, store, fleet_cfg=cfg(), topo=topo,
+                        job_workers=3, worker_kind="process")
+    assert ap == a1
+    assert len([x for x in a1 if x[1] == "fleet"]) >= 2
+    assert sp.per_job == s1.per_job
+
+
+def test_process_replay_telemetry_merge(world, tmp_path):
+    """Worker telemetry registries absorb into the parent's: the merged
+    snapshot must equal the serial run's (minus the timestamp)."""
+    prog, store = world
+    logdir = str(tmp_path / "logs")
+    _write_mixed_fleet_logs(logdir, prog)
+    _, _, m1 = _replay(logdir, store, job_workers=1)
+    _, _, mp_ = _replay(logdir, store, job_workers=2,
+                        worker_kind="process")
+    snap1, snapp = m1.telemetry.snapshot(), mp_.telemetry.snapshot()
+    assert snapp["counters"] == snap1["counters"]
+    # gauges equal except wall-clock rates (nondeterministic by nature)
+    wall = ("replay.events_per_s",)
+    g1 = {k: v for k, v in snap1["gauges"].items() if k not in wall}
+    gp = {k: v for k, v in snapp["gauges"].items() if k not in wall}
+    assert gp == g1
+    assert "replay.events_per_s" in snapp["gauges"]   # still reported
+
+
+def test_process_pool_batches_ingest_roundtrip(world):
+    """The live-streaming IPC shape: EventBatch chunks shipped as FCS
+    bytes (``TASK_BATCHES``) through a worker process diagnose exactly
+    like local ``ingest`` of the same chunks."""
+    prog, store = world
+    from repro.fleet.ipc import TASK_BATCHES, ProcessWorkerPool
+    from repro.store import encode_batch_bytes
+    batch = ClusterSimulator(N, prog, seed=61,
+                             injections=SCENARIOS["gc"]).run_batch(5)
+    chunks = _step_chunks(batch)
+    cfg = EngineConfig(backend="dense-train", num_ranks=N)
+
+    mux1 = FleetMultiplexer(FleetConfig(watermark_delay=1), history=store)
+    mux1.add_job("job-x", cfg)
+    for c in chunks:
+        mux1.ingest("job-x", c)
+    mux1.flush("job-x")
+    oracle = [(fa.job_id, _sig(fa.anomaly)) for fa in mux1.poll()]
+
+    mux2 = FleetMultiplexer(FleetConfig(watermark_delay=1), history=store)
+    mux2.add_job("job-x", cfg)
+    init = {"history": store,
+            "fleet": {"watermark_delay": 1, "backend": mux2.cfg.backend,
+                      "max_pending_rows": None},
+            "replay": {}}
+
+    def on_anoms(job_id, items):
+        job = mux2.job(job_id)
+        for ts, a in items:
+            mux2.stream.push(job_id, a, ts)
+            job.count_anomaly()
+
+    pool = ProcessWorkerPool(1, init)
+    try:
+        pool.submit((TASK_BATCHES, "job-x",
+                     [encode_batch_bytes(c) for c in chunks], cfg, False))
+        results = pool.drain(on_anomalies=on_anoms)
+    finally:
+        pool.close()
+    res = results["job-x"]
+    mux2.interner.merge_tables(res["names"], res["groups"])
+    mux2.telemetry.absorb(res["telemetry"])
+    mux2.restore_job_state("job-x", res["state"])
+    got = [(fa.job_id, _sig(fa.anomaly)) for fa in mux2.poll()]
+    assert got == oracle and oracle
+    assert res["stats"].events == len(batch)
+    assert res["stats"].per_job == {"job-x": len(batch)}
+    assert res["stats"].worker_kind == "process"
+    assert mux2.stats() == mux1.stats()
+
+
+def test_process_pool_worker_error_propagates(world):
+    """A job that blows up inside a worker surfaces as a RuntimeError
+    carrying the worker traceback — not a hang, not silence."""
+    _, store = world
+    from repro.fleet.ipc import ProcessWorkerPool
+    init = {"history": store,
+            "fleet": {"watermark_delay": 1},
+            "replay": {}}
+    pool = ProcessWorkerPool(1, init)
+    try:
+        pool.submit(("no-such-kind", "job-bad", [], None, False))
+        with pytest.raises(RuntimeError, match="job-bad"):
+            pool.drain()
+    finally:
+        pool.close()
+
+
+def test_max_pending_rows_forced_close(world):
+    """The per-job memory cap: a stalled watermark cannot buffer
+    unboundedly — oldest pending steps are force-closed (newest always
+    survives), the forced closes are counted, and the behaviour is
+    deterministic run-to-run."""
+    prog, store = world
+    batch = ClusterSimulator(N, prog, seed=71,
+                             injections=SCENARIOS["gc"]).run_batch(6)
+    chunks = _step_chunks(batch)
+
+    def run(cap):
+        # watermark_delay so large no step EVER closes on its own: only
+        # the cap (or the final flush) can close anything
+        mux = FleetMultiplexer(FleetConfig(watermark_delay=100,
+                                           max_pending_rows=cap),
+                               history=store)
+        mux.add_job("job-m", EngineConfig(backend="dense-train",
+                                          num_ranks=N))
+        for c in chunks:
+            mux.ingest("job-m", c)
+        job = mux.job("job-m")
+        buffered = job.store.buffered_rows
+        pending = list(job.store.pending_steps())
+        forced = mux.telemetry.counter("fleet.forced_closes",
+                                       job="job-m").value
+        anoms = [_sig(fa.anomaly) for fa in mux.finalize()]
+        return buffered, pending, forced, anoms
+
+    b0, p0, f0, _ = run(None)
+    assert f0 == 0 and len(p0) == len(chunks)      # uncapped: all pending
+    cap = max(len(c) for c in chunks) + 1
+    b1, p1, f1, a1 = run(cap)
+    assert f1 >= 1
+    assert b1 <= cap or len(p1) == 1      # cap held (newest step is exempt)
+    assert p1[-1] == max(c.step[0] for c in chunks)  # newest never forced
+    assert run(cap) == (b1, p1, f1, a1)              # deterministic
+
+
+def test_shared_interner_merge_tables():
+    """Worker intern tables merge deterministically: ids for known
+    strings are stable, new strings append in table order."""
+    si = SharedInterner()
+    assert si.intern_name("alpha") == 0
+    assert si.intern_group("g0") == 0
+    si.merge_tables(["beta", "alpha", "gamma"], ["g1", "g0"])
+    assert si.names == ["alpha", "beta", "gamma"]
+    assert si.groups == ["g0", "g1"]
+    si.merge_tables(["gamma", "delta"], [])
+    assert si.names == ["alpha", "beta", "gamma", "delta"]
+
+
+def test_telemetry_absorb():
+    """absorb() lands a worker snapshot on live parent handles: counters
+    add (zero-valued series still materialize), gauges last-write-win,
+    extra_tags re-tag the incoming series."""
+    from repro.core.telemetry import TelemetryRegistry
+    worker = TelemetryRegistry()
+    worker.counter("fleet.late_rows", job="a").inc(3)
+    worker.counter("fleet.zero", job="a")
+    worker.gauge("fleet.watermark_lag", job="a").set(2.0)
+    parent = TelemetryRegistry()
+    parent.counter("fleet.late_rows", job="a").inc(1)
+    parent.absorb(worker.snapshot())
+    assert parent.counter("fleet.late_rows", job="a").value == 4
+    assert parent.counter("fleet.zero", job="a").value == 0
+    assert parent.gauge("fleet.watermark_lag", job="a").value == 2.0
+    parent.absorb(worker.snapshot(), extra_tags={"shard": "1"})
+    assert parent.counter("fleet.late_rows", job="a",
+                          shard="1").value == 3
 
 
 def test_daemon_attach_fleet_and_idempotent_stop():

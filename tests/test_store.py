@@ -629,3 +629,33 @@ def test_replayer_process_executor(tmp_path):
                           serial_below=0).replay_dir(str(tmp_path))
     assert stats.events == len(batch)
     assert len(mux.job("job-p").evaluated) > 0
+
+
+# --------------------------------------------------------------------- #
+# in-memory FCS bytes (the fleet IPC wire format)
+# --------------------------------------------------------------------- #
+def test_encode_decode_batch_bytes_roundtrip():
+    batch = _sim(seed=9, steps=3)
+    _assert_batches_byte_equal(
+        store.decode_batch_bytes(store.encode_batch_bytes(batch)), batch)
+    # version passthrough: v3 blobs carry (and verify) the stats block
+    _assert_batches_byte_equal(
+        store.decode_batch_bytes(store.encode_batch_bytes(batch, version=3)),
+        batch)
+    # a blob holding several appended segments decodes to their concat
+    order, uniq, bounds = batch.step_index()
+    parts = [batch.take(order[bounds[i]:bounds[i + 1]])
+             for i in range(uniq.size)]
+    got = store.decode_batch_bytes(
+        b"".join(store.encode_batch_bytes(p, version=1) for p in parts))
+    assert len(got) == len(batch)
+    assert np.array_equal(np.sort(got.end_ts), np.sort(batch.end_ts))
+    assert len(store.decode_batch_bytes(b"")) == 0
+
+
+def test_is_sidecar_path():
+    assert store.is_sidecar_path("/logs/job-a.fcs3" + store.ROLLUP_SUFFIX)
+    assert store.is_sidecar_path("telemetry-000.json")
+    assert not store.is_sidecar_path("/logs/job-a.jsonl")
+    assert not store.is_sidecar_path("job.json")
+    assert not store.is_sidecar_path("telemetry-abc.json")
