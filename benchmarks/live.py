@@ -1,0 +1,303 @@
+"""Live fleet service: sustained socket/tail ingest + event->anomaly latency.
+
+Measures, per (jobs x ranks x steps) scale and worker kind:
+  * live-socket: a rack-degradation fleet (half the jobs jittering on
+    shared racks, ``cross_job_failslow`` registered) streamed as FLW
+    BATCH frames — one FCS segment per step, the daemon wire shape —
+    into a resident :class:`~repro.serve.service.FleetService`;
+    sustained aggregate ingest+diagnose rate (Mev/s) and per-anomaly
+    event->anomaly latency (send time of the anomaly's step frame ->
+    ``on_anomaly`` delivery; includes the watermark by design — that IS
+    the pipeline's time-to-diagnosis), p50/p99;
+  * live-tail: the same fleet spilled to disk and followed by the
+    ``FileTailer`` plane;
+  * graceful leave: one job BYEs mid-run while the rest keep streaming,
+    then a straggler frame arrives post-BYE (dropped + counted).
+
+Every arm is HARD-GATED on byte-equivalence with ``replay_dir`` over
+the same recorded files: anomaly stream (after the ``(ts, job_id,
+seq)`` merge sort), ``ReplayStats`` signature, and the fleet-tier
+reclassification count must all be identical, or the bench raises —
+this is the CI gate for the live planes.  Results merge into
+``BENCH_live.json``.
+
+    PYTHONPATH=src python -m benchmarks.live [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+import tempfile
+import time
+
+from benchmarks._util import emit, merge_bench_json
+from repro import store as trace_store
+from repro.configs import get_config
+from repro.core.engine import DiagnosticEngine, EngineConfig
+from repro.core.history import HistoryStore
+from repro.core.timeline import (ClusterSimulator, Injection,
+                                 program_from_config)
+from repro.fleet import FleetConfig, FleetMultiplexer, FleetReplayer
+from repro.serve import FleetService, LiveClient, ServiceConfig
+
+OUT_JSON = "BENCH_live.json"
+
+
+def _learned_store(prog, ranks: int) -> HistoryStore:
+    store = HistoryStore()
+    learner = DiagnosticEngine(
+        EngineConfig(backend="dense-train", num_ranks=ranks), store)
+    learner.ingest_batch(ClusterSimulator(ranks, prog, seed=1).run_batch(3))
+    learner.learn_healthy()
+    return store
+
+
+def _make_fleet(prog, jobs: int, ranks: int, steps: int):
+    """Rack-degradation fleet: first half jitters on shared racks (two
+    jobs per rack) — hang-free, so diagnosis is bit-exact live (see
+    src/repro/serve/README.md caveats)."""
+    chunk_lists, topo, total = {}, {}, 0
+    n_slow = max(jobs // 2, 2)
+    for i in range(jobs):
+        inj = [Injection(kind="network_jitter", factor=3.0, start_step=3)] \
+            if i < n_slow else []
+        sim = ClusterSimulator(ranks, prog, seed=100 + i, injections=inj)
+        batch = sim.run_batch(steps)
+        job_id = f"lv{i:02d}-{'jitter' if i < n_slow else 'healthy'}"
+        order, uniq, bounds = batch.step_index()
+        chunk_lists[job_id] = [batch.take(order[bounds[j]:bounds[j + 1]])
+                               for j in range(uniq.size)]
+        topo[job_id] = {"rack": f"rack{i // 2}", "switch": f"sw{i // 4}"}
+        total += len(batch)
+    return chunk_lists, topo, total
+
+
+def _write_logs(logdir: str, chunk_lists: dict) -> None:
+    for job_id, chunks in chunk_lists.items():
+        path = os.path.join(logdir, f"{job_id}.fcs")
+        for c in chunks:               # one segment per step, daemon-shaped
+            trace_store.write_trace(c, path, codec="fcs")
+
+
+def _mk_mux(store, topo) -> FleetMultiplexer:
+    return FleetMultiplexer(FleetConfig(
+        watermark_delay=1, fleet_detectors=["cross_job_failslow"],
+        topology=topo), history=store)
+
+
+def _ecfg(ranks: int) -> EngineConfig:
+    return EngineConfig(backend="dense-train", num_ranks=ranks)
+
+
+def _oracle(logdir, store, topo, chunk_lists, ranks):
+    """Serial ``replay_dir`` + finalize on the recorded files: the
+    ground truth every live arm must reproduce byte-for-byte."""
+    mux = _mk_mux(store, topo)
+    for job_id in chunk_lists:
+        mux.add_job(job_id, _ecfg(ranks))
+    stats = FleetReplayer(mux, chunk_bytes=4 << 20).replay_dir(
+        logdir, job_workers=1)
+    out = sorted(mux.finalize(), key=lambda a: (a.ts, a.job_id, a.seq))
+    anoms = [str(fa) for fa in out]
+    reclass = sum(1 for fa in out if fa.origin == "fleet")
+    sig = (stats.events, dict(sorted(stats.per_job.items())))
+    return anoms, sig, reclass
+
+
+def _assert_equivalent(arm: str, got, oracle) -> None:
+    g_anoms, g_sig, g_reclass = got
+    o_anoms, o_sig, o_reclass = oracle
+    if g_anoms != o_anoms:
+        raise AssertionError(
+            f"{arm} diagnosis differs from replay_dir: "
+            f"live={g_anoms!r} replay={o_anoms!r}")
+    if g_sig != o_sig:
+        raise AssertionError(
+            f"{arm} stats differ from replay_dir: "
+            f"live={g_sig!r} replay={o_sig!r}")
+    if g_reclass != o_reclass:
+        raise AssertionError(
+            f"{arm} fleet tier differs from replay_dir: "
+            f"{o_reclass} vs {g_reclass} reclassifications")
+
+
+def _pct(sorted_vals: list, q: float) -> float:
+    if not sorted_vals:
+        return float("nan")
+    i = min(int(q * len(sorted_vals)), len(sorted_vals) - 1)
+    return sorted_vals[i]
+
+
+def _wait(pred, timeout_s: float = 120.0) -> None:
+    deadline = time.monotonic() + timeout_s
+    while not pred():
+        if time.monotonic() > deadline:
+            raise TimeoutError("live bench: service did not drain in time")
+        time.sleep(0.005)
+
+
+def bench_socket(jobs: int, ranks: int, steps: int,
+                 worker_kind: str) -> dict:
+    cfg = get_config("llama-20b-paper")
+    prog = program_from_config(cfg, num_chips=ranks)
+    store = _learned_store(prog, ranks)
+    chunk_lists, topo, total_events = _make_fleet(prog, jobs, ranks, steps)
+    label = f"{jobs}j_{ranks}r"
+    leaver = sorted(chunk_lists)[0]
+
+    logdir = tempfile.mkdtemp(prefix="flare_live_bench_")
+    try:
+        _write_logs(logdir, chunk_lists)
+        oracle = _oracle(logdir, store, topo, chunk_lists, ranks)
+
+        arrivals: list = []      # (FleetAnomaly, arrival_monotonic)
+        svc = FleetService(
+            _mk_mux(store, topo),
+            ServiceConfig(port=0, worker_kind=worker_kind,
+                          drain_interval_s=0.01,
+                          default_engine=_ecfg(ranks)),
+            on_anomaly=lambda fa, t: arrivals.append((fa, t))).start()
+        cl = LiveClient("127.0.0.1", svc.port)
+        for job_id in sorted(chunk_lists):
+            cl.hello(job_id, topology=topo[job_id])
+
+        # stream round-robin (concurrent jobs), one frame per step; the
+        # leaver finishes first, BYEs mid-run, then a straggler frame
+        # tests the graceful-leave drop path
+        frames = {j: [(int(c.step[0]), trace_store.encode_batch_bytes(c))
+                      for c in chunks]
+                  for j, chunks in chunk_lists.items()}
+        t_sent: dict = {}
+        t0 = time.monotonic()
+        pending = {j: list(f) for j, f in frames.items()}
+        byed = False
+        while any(pending.values()):
+            for job_id in sorted(pending):
+                if pending[job_id]:
+                    step, payload = pending[job_id].pop(0)
+                    t_sent[(job_id, step)] = time.monotonic()
+                    cl.send_batch(job_id, payload)
+            if not pending[leaver] and not byed:
+                byed = True
+                cl.bye(leaver)
+                cl.send_batch(leaver, frames[leaver][-1][1])  # straggler
+        for job_id in sorted(chunk_lists):
+            if job_id != leaver:
+                cl.bye(job_id)
+        cl.close()
+        # sustained rate: until every frame is ingested AND every job's
+        # pipeline has drained (BYE -> departed covers diagnosis too)
+        _wait(lambda: svc.stats.events >= total_events and all(
+            svc.mux.job(j).departed for j in chunk_lists))
+        elapsed = time.monotonic() - t0
+        svc.finalize()
+
+        got = sorted((fa for fa, _ in arrivals),
+                     key=lambda a: (a.ts, a.job_id, a.seq))
+        sig = (svc.stats.events, dict(sorted(svc.stats.per_job.items())))
+        reclass = sum(1 for fa in got if fa.origin == "fleet")
+        _assert_equivalent(f"live-socket[{worker_kind}]",
+                           ([str(fa) for fa in got], sig, reclass), oracle)
+        counters = svc.telemetry.snapshot()["counters"]
+        dropped = counters.get("serve.dropped_frames", 0)
+        departed_rows = counters.get(
+            f"fleet.departed_rows{{job={leaver}}}", 0)
+        if departed_rows != len(chunk_lists[leaver][-1]):
+            raise AssertionError(
+                f"graceful leave: straggler not counted "
+                f"({departed_rows} rows)")
+    finally:
+        shutil.rmtree(logdir, ignore_errors=True)
+
+    lat_ms = sorted(
+        (t - t_sent[(fa.job_id, int(fa.anomaly.step))]) * 1e3
+        for fa, t in arrivals
+        if (fa.job_id, int(fa.anomaly.step)) in t_sent)
+    p50, p99 = _pct(lat_ms, 0.50), _pct(lat_ms, 0.99)
+    evs = total_events / elapsed
+    emit(f"live/socket_{worker_kind}_{label}", 1e6 / evs,
+         f"{evs / 1e6:.2f}Mev_s;p50_ms={p50:.1f};p99_ms={p99:.1f};"
+         f"anomalies={len(got)};reclassified={reclass};"
+         f"dropped={dropped};equivalent=TRUE;leave=TRUE")
+    return {
+        "jobs": jobs, "ranks": ranks, "steps": steps,
+        "events": total_events, "worker_kind": worker_kind,
+        "ingest_events_per_s": evs,
+        "latency_p50_ms": p50, "latency_p99_ms": p99,
+        "latency_samples": len(lat_ms),
+        "anomalies": len(got), "fleet_reclassified": reclass,
+        "diagnosis_byte_equivalent": True,
+        "graceful_leave_correct": True,
+    }
+
+
+def bench_tail(jobs: int, ranks: int, steps: int) -> dict:
+    cfg = get_config("llama-20b-paper")
+    prog = program_from_config(cfg, num_chips=ranks)
+    store = _learned_store(prog, ranks)
+    chunk_lists, topo, total_events = _make_fleet(prog, jobs, ranks, steps)
+    label = f"{jobs}j_{ranks}r"
+
+    logdir = tempfile.mkdtemp(prefix="flare_live_tail_bench_")
+    try:
+        _write_logs(logdir, chunk_lists)
+        oracle = _oracle(logdir, store, topo, chunk_lists, ranks)
+
+        got: list = []
+        svc = FleetService(
+            _mk_mux(store, topo),
+            ServiceConfig(port=None, tail_dir=logdir, tail_poll_s=0.005,
+                          drain_interval_s=0.01,
+                          default_engine=_ecfg(ranks)),
+            on_anomaly=lambda fa, t: got.append(fa))
+        for job_id in chunk_lists:     # tier needs topology before resolve
+            svc.mux.set_topology(job_id, **topo[job_id])
+        t0 = time.monotonic()
+        svc.start()
+        _wait(lambda: svc.tailer.stats.events >= total_events)
+        elapsed = time.monotonic() - t0
+        svc.finalize()
+
+        out = sorted(got, key=lambda a: (a.ts, a.job_id, a.seq))
+        sig = (svc.tailer.stats.events,
+               dict(sorted(svc.tailer.stats.per_job.items())))
+        reclass = sum(1 for fa in out if fa.origin == "fleet")
+        _assert_equivalent("live-tail",
+                           ([str(fa) for fa in out], sig, reclass), oracle)
+    finally:
+        shutil.rmtree(logdir, ignore_errors=True)
+
+    evs = total_events / elapsed
+    emit(f"live/tail_{label}", 1e6 / evs,
+         f"{evs / 1e6:.2f}Mev_s;events={total_events};"
+         f"anomalies={len(out)};reclassified={reclass};equivalent=TRUE")
+    return {
+        "jobs": jobs, "ranks": ranks, "steps": steps,
+        "events": total_events,
+        "tail_events_per_s": evs,
+        "anomalies": len(out), "fleet_reclassified": reclass,
+        "diagnosis_byte_equivalent": True,
+    }
+
+
+def main(quick: bool = False):
+    results = {}
+    jobs, ranks, steps = (4, 16, 6) if quick else (8, 64, 8)
+    scale = f"{jobs}x{ranks}x{steps}"
+    for kind in ("inline", "process"):
+        results[f"socket_{kind}_{scale}"] = bench_socket(
+            jobs, ranks, steps, worker_kind=kind)
+    results[f"tail_{scale}"] = bench_tail(jobs, ranks, steps)
+    merge_bench_json(OUT_JSON, results)
+    emit("live/json", 0.0, f"merged={OUT_JSON}")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small scale for CI smoke runs")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    main(quick=args.quick)

@@ -14,6 +14,8 @@ Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/_util.emit).
              BENCH_scenarios.json)
   §Query  -> archive (predicate-pushdown reads + rollup cache;
              BENCH_archive.json)
+  §Live   -> live (socket/tail ingest Mev/s + event->anomaly latency,
+             byte-equivalence gated; BENCH_live.json)
 """
 from __future__ import annotations
 
@@ -23,7 +25,7 @@ import traceback
 
 def main() -> None:
     from benchmarks import (archive, case2_matmul, fleet, hang, ingest,
-                            issue_dist, logsize, overhead, regression,
+                            issue_dist, live, logsize, overhead, regression,
                             roofline, scenarios, storage, vminority)
     sections = [
         ("fig8_overhead", overhead.main),
@@ -39,6 +41,7 @@ def main() -> None:
         ("scale_storage", storage.main),
         ("robust_scenarios", scenarios.main),
         ("query_archive", archive.main),
+        ("live_serve", live.main),
     ]
     print("name,us_per_call,derived")
     failures = []

@@ -220,6 +220,7 @@ class TraceArchive:
                      time_range: Optional[tuple] = None,
                      ranks=None, kinds=None, severity: Optional[str] = None,
                      columns: Optional[dict] = None,
+                     max_bytes: Optional[int] = None,
                      pushdown: bool = True, with_scan: bool = False):
         """Exact matching rows for ``job`` as one :class:`EventBatch`.
 
@@ -230,7 +231,15 @@ class TraceArchive:
         — same row filter, same concat order, so results are
         byte-identical; benchmarks assert it).  With ``with_scan=True``
         returns ``(batch, ScanStats)`` so callers see how many bytes the
-        stats directory saved."""
+        stats directory saved.
+
+        ``max_bytes`` is a per-query DECODE budget: the scan stops at
+        the first segment boundary past it (stats-pruned bytes are
+        free — only inflated bytes spend budget) and flags
+        ``ScanStats.truncated`` — the result is the archive-order prefix
+        the budget affords, deterministic for a given archive.  A
+        dashboard query against a months-long job can therefore never
+        decode the world; it says "truncated" instead."""
         self.telemetry.counter("archive.queries", kind="events").inc()
         if predicate is None:
             predicate = Predicate(step_range=step_range,
@@ -240,6 +249,8 @@ class TraceArchive:
         scan = ScanStats()
         parts: list[EventBatch] = []
         for path in self._job_paths(job):
+            if scan.truncated:
+                break
             codec = codec_for_path(path)
             if codec.name.startswith("fcs"):
                 it = iter_segments(path,
@@ -247,11 +258,27 @@ class TraceArchive:
                                    scan=scan)
                 for seg in it:
                     parts.append(predicate.filter(seg))
+                    if max_bytes is not None \
+                            and scan.bytes_decoded >= max_bytes:
+                        scan.truncated = True
+                        break
             else:
+                # non-segmented formats decode whole-file; budget them
+                # by on-disk size so mixed archives still terminate
                 for batch, _sk in codec.iter_chunks(path):
                     scan.segments += 1
                     scan.rows += len(batch)
                     parts.append(predicate.filter(batch))
+                try:
+                    scan.bytes_decoded += os.path.getsize(path)
+                except OSError:
+                    pass
+                if max_bytes is not None \
+                        and scan.bytes_decoded >= max_bytes:
+                    scan.truncated = True
+        if scan.truncated:
+            self.telemetry.counter("archive.truncated_queries",
+                                   kind="events").inc()
         out = EventBatch.concat(parts) if parts else EventBatch.empty()
         return (out, scan) if with_scan else out
 
@@ -337,30 +364,55 @@ class TraceArchive:
             self._store_disk_rollup(path, fp, rollup)
         return rollup
 
-    def rollups(self, job: str) -> dict[int, dict]:
-        """Merged step -> record across the job's rotated files."""
+    def rollups(self, job: str, *, max_bytes: Optional[int] = None,
+                with_truncation: bool = False):
+        """Merged step -> record across the job's rotated files.
+
+        ``max_bytes`` budgets the files folded in by their ON-DISK size
+        — rotation-order prefix, so the answer is deterministic for a
+        given archive regardless of which rollups happened to be cached
+        (a warm cache makes the same truncated query faster, never
+        different).  ``with_truncation=True`` returns
+        ``(rollup, truncated)``."""
         out: dict[int, dict] = {}
+        used = 0
+        truncated = False
         for path in self._job_paths(job):
+            if max_bytes is not None and used >= max_bytes:
+                truncated = True
+                break
+            try:
+                used += os.path.getsize(path)
+            except OSError:
+                pass
             for s, rec in self._file_rollup(path).items():
                 out[s] = _merge_records(out[s], rec) if s in out else rec
-        return out
+        return (out, truncated) if with_truncation else out
 
     def query_metrics(self, job: str,
                       step_range: Optional[tuple] = None,
                       metric: str = "throughput", *,
-                      bucket: int = 1) -> list[tuple[int, object]]:
+                      bucket: int = 1,
+                      max_bytes: Optional[int] = None,
+                      with_truncation: bool = False):
         """``[(step, value), ...]`` for one rollup metric, step-sorted.
 
         ``metric`` is one of ``throughput | t_step | v_inter |
         v_minority | issue_p99 | bandwidth | events | rank_flops``
         (the last returns a per-rank dict per step).  ``bucket > 1``
         groups steps into ``bucket``-wide buckets keyed by their first
-        step, events-weighted."""
+        step, events-weighted.  ``max_bytes`` budgets the rollup as in
+        :meth:`rollups`; ``with_truncation=True`` returns
+        ``(series, truncated)``."""
         if metric != "rank_flops" and metric not in SCALAR_METRICS:
             raise ValueError(f"unknown metric {metric!r}; known: "
                              f"{SCALAR_METRICS + ('rank_flops',)}")
         self.telemetry.counter("archive.queries", kind="metrics").inc()
-        recs = self.rollups(job)
+        recs, truncated = self.rollups(job, max_bytes=max_bytes,
+                                       with_truncation=True)
+        if truncated:
+            self.telemetry.counter("archive.truncated_queries",
+                                   kind="metrics").inc()
         if step_range is not None:
             lo, hi = step_range
             recs = {s: r for s, r in recs.items() if lo <= s <= hi}
@@ -371,7 +423,8 @@ class TraceArchive:
                 grouped[b] = _merge_records(grouped[b], recs[s]) \
                     if b in grouped else dict(recs[s])
             recs = grouped
-        return [(s, recs[s][metric]) for s in sorted(recs)]
+        series = [(s, recs[s][metric]) for s in sorted(recs)]
+        return (series, truncated) if with_truncation else series
 
     # ------------------------------------------------------------------ #
     # anomalies: cached full-archive replay

@@ -67,6 +67,15 @@ class DaemonConfig:
     # one per daemon.  Pass a shared registry (or attach to a fleet,
     # whose snapshot merges daemon registries) for one pipeline view.
     telemetry: Optional[TelemetryRegistry] = None
+    # live fleet service endpoint ("host:port"): each flushed batch is
+    # FCS-framed (repro.serve wire protocol) and shipped from the daemon
+    # thread with reconnect/backoff; a dead or slow service costs
+    # COUNTED drops (daemon.live_dropped) — it can never block the
+    # heartbeat or kill the daemon, and the spill/tail plane recovers
+    # whatever live frames were lost
+    live_endpoint: Optional[str] = None
+    live_job_id: Optional[str] = None      # default: "job-rank<rank>"
+    live_topology: Optional[dict] = None   # rack/switch attrs, HELLO'd
 
 
 class TracingDaemon:
@@ -112,6 +121,15 @@ class TracingDaemon:
             self._spill = SegmentedTraceWriter(
                 self.cfg.log_path, codec=codec,
                 rotate_bytes=self.cfg.log_rotate_bytes)
+        self._live = None
+        if self.cfg.live_endpoint:
+            from repro.serve.client import LiveBatchSink
+            self._live = LiveBatchSink(
+                self.cfg.live_endpoint,
+                self.cfg.live_job_id or f"job-rank{self.cfg.rank}",
+                topology=self.cfg.live_topology,
+                telemetry=self.telemetry)
+            self.add_batch_sink(self._live)
 
     # ------------------------------------------------------------------ #
     # lifecycle
@@ -139,6 +157,9 @@ class TracingDaemon:
             self._thread.join(timeout=2.0)
         self.interceptor.uninstall()
         self._flush()
+        if self._live is not None:
+            self._live.close()        # best-effort BYE; reconnects if
+            #                           the daemon re-attaches later
         self._attached = False
         global _GLOBAL_DAEMON
         if _GLOBAL_DAEMON is self:

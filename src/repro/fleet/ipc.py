@@ -1,4 +1,4 @@
-"""FCS-over-IPC process workers: the fleet replay engine past the GIL.
+"""FCS-over-IPC process workers: the fleet engine past the GIL.
 
 Thread-per-job replay (``FleetReplayer.replay_dir``) is byte-equivalent
 to serial but GIL-bound — per-step diagnosis interleaves short Python
@@ -14,25 +14,35 @@ already has:
     :class:`~repro.core.columnar.EventBatch` chunks as FCS-encoded
     segments (``repro.store.encode_batch_bytes`` — the archival spill
     format, ~11.5 B/event at 256 ranks) instead of numpy pickles;
-  * **outputs**: anomalies stream back incrementally per file on a
-    BOUNDED result queue (backpressure: a slow parent stalls its
-    workers, not the box's memory), followed by one terminal envelope
-    per job carrying the compact serialized end state — job-local
-    ``ReplayStats``, the recorded fleet-tier observation sequence
-    (``defer_fleet_tier(record=True)``), the worker's intern tables,
-    a telemetry snapshot, and the store/engine summary the parent
-    mirrors back onto its own ``FleetJob``.
+  * **outputs**: anomalies stream back incrementally on a BOUNDED
+    result queue (backpressure: a slow parent stalls its workers, not
+    the box's memory), ``"fleet"`` envelopes carry each job's keyed
+    fleet-tier observations + frontier progress as they accrue
+    (``FleetMultiplexer.record_fleet_observations``), and one terminal
+    envelope per job ships the compact serialized end state — job-local
+    ``ReplayStats``, any post-flush observations, the job's intern
+    tables, a telemetry snapshot, and the store/engine summary the
+    parent mirrors back onto its own ``FleetJob``.
 
-Determinism contract: a worker owns exactly one job at a time and ships
-that job's anomalies in push order; the parent re-pushes on ITS stream
-(per-job order preserved; the stream's ``(ts, job_id, seq)`` drain sort
-already makes cross-job interleave scheduling-independent), merges
-intern tables and stats in sorted-path group order, and replays the
-recorded fleet-tier observations through ``resolve_fleet_tier`` in the
-same two phases serial replay produces (ingest-phase in group order,
-flush-phase in registration order).  Diagnosis output is therefore
-byte-equivalent to serial by construction — asserted end to end in
-``benchmarks/fleet.py`` and ``tests/test_fleet.py``.
+The pool is RESIDENT: workers hold their open jobs' multiplexers
+between tasks, so a long-lived service (``repro.serve``) streams
+``TASK_BATCHES`` frames at a job for hours and closes it with
+``TASK_CLOSE`` when it leaves the fleet.  Each job is pinned to one
+worker at first submission (per-worker task queues keep a job's tasks
+in order); one-shot replay callers just ``submit`` everything and
+``drain`` once — the shutdown sentinel closes whatever is still open.
+
+Determinism contract: a worker owns a job exclusively and ships its
+anomalies in push order; the parent re-pushes on ITS stream (per-job
+order preserved; the stream's ``(ts, job_id, seq)`` drain sort already
+makes cross-job interleave scheduling-independent), merges intern
+tables and stats in sorted-path group order, and buffers the shipped
+fleet observations — whose per-job cummax KEYS the worker computed over
+the full stream — for the parent's frontier resolution
+(``resolve_fleet_ready`` live, ``resolve_fleet_all`` at end of drain).
+Diagnosis output is therefore byte-equivalent to serial by construction
+— asserted end to end in ``benchmarks/fleet.py``, ``benchmarks/
+live.py`` and ``tests/test_fleet.py``.
 
 Worker entry points are top-level functions with picklable arguments,
 so the pool works under both ``fork`` (Linux default) and ``spawn``.
@@ -45,96 +55,141 @@ import threading
 import traceback
 from typing import Callable, Optional
 
-# task envelope: ("replay", job_id, [paths], engine_cfg, record_fleet)
-#             or ("batches", job_id, [fcs_bytes], engine_cfg, record_fleet)
-#             or None (shutdown sentinel, one per worker)
+# task envelope: (kind, job_id, payload, engine_cfg, record_fleet)
+#   ("replay", job_id, [paths], engine_cfg, record_fleet)
+#   ("batches", job_id, [fcs_bytes], engine_cfg, record_fleet)
+#   ("open", job_id, None, engine_cfg, record_fleet)   explicit join
+#   ("close", job_id, None, None, None)                graceful leave
+#   None (shutdown sentinel: close every open job, then exit)
 TASK_REPLAY = "replay"
 TASK_BATCHES = "batches"
+TASK_OPEN = "open"
+TASK_CLOSE = "close"
 
 # result envelopes, on the owning worker's bounded queue:
-#   ("anomalies", job_id, [(ts, Anomaly), ...])   incremental, per file
-#   ("job", job_id, payload_dict)                 terminal, per job
+#   ("anomalies", job_id, [(ts, Anomaly), ...])     incremental
+#   ("fleet", job_id, [(key, step, anoms, ts)], progress)  incremental
+#   ("job", job_id, payload_dict)                   terminal, per job
 #   ("error", job_id, traceback_str)
-#   ("exit",)                                     worker is done
+#   ("exit",)                                       worker is done
 _EXIT = ("exit",)
 
 
-def _run_job(result_q, kind: str, job_id: str, payload, engine_cfg,
-             record_fleet: bool, init: dict) -> None:
-    """One job's full pipeline inside the worker process: private
-    multiplexer + engine, eager flush (worker state dies with the
-    process), results shipped as they appear."""
-    # imported here, not at module top: repro.fleet.replay imports this
-    # module, and the worker only pays the import once per process
-    from repro.fleet.multiplexer import FleetConfig, FleetMultiplexer
-    from repro.fleet.replay import FleetReplayer, ReplayStats
-    from repro.store import decode_batch_bytes
+class _WorkerJob:
+    """One open job resident in a worker process: a private single-job
+    multiplexer (its own engine + intern tables, so terminal payloads
+    keep the exact per-job shape the parent merges deterministically),
+    the replayer that drives it, and job-local stats."""
 
-    mux = FleetMultiplexer(FleetConfig(**init["fleet"]),
-                           history=init["history"])
-    mux.add_job(job_id, engine_cfg)
-    # record the fleet-tier observation sequence for the parent (which
-    # owns the actual cross-job detectors) — skipped when it has none
-    mux.defer_fleet_tier(record=record_fleet)
-    rep = FleetReplayer(mux, job_workers=1, **init["replay"])
-    stats = ReplayStats(worker_kind="process")
+    __slots__ = ("mux", "rep", "stats", "record_fleet")
 
-    def _ship_anomalies() -> None:
-        pend = mux.stream.drain_raw()
-        if pend:
-            result_q.put(("anomalies", job_id,
-                          [(fa.ts, fa.anomaly) for fa in pend]))
+    def __init__(self, job_id: str, engine_cfg, record_fleet: bool,
+                 init: dict):
+        from repro.fleet.multiplexer import FleetConfig, FleetMultiplexer
+        from repro.fleet.replay import FleetReplayer, ReplayStats
+        self.mux = FleetMultiplexer(FleetConfig(**init["fleet"]),
+                                    history=init["history"])
+        self.mux.add_job(job_id, engine_cfg)
+        # record the fleet-tier observation sequence for the parent
+        # (which owns the actual cross-job detectors) — skipped when it
+        # has none
+        if record_fleet:
+            self.mux.record_fleet_observations(True)
+        self.rep = FleetReplayer(self.mux, job_workers=1, **init["replay"])
+        self.stats = ReplayStats(worker_kind="process")
+        self.record_fleet = record_fleet
 
-    if kind == TASK_REPLAY:
-        rep._replay_job(job_id, payload, stats, on_file=_ship_anomalies)
-    elif kind == TASK_BATCHES:
-        for blob in payload:
-            batch = decode_batch_bytes(blob)
-            stats.events += len(batch)
-            stats.per_job[job_id] = stats.per_job.get(job_id, 0) \
-                + len(batch)
-            rep._ingest_step_aligned(job_id, batch)
-            _ship_anomalies()
-    else:
-        raise ValueError(f"unknown worker task kind {kind!r}")
 
-    # split the recorded fleet observations at the flush boundary: the
-    # parent replays ingest-phase obs in group order and flush-phase obs
-    # in registration order — the exact serial sequence
-    obs_ingest = mux.drain_deferred_fleet().get(job_id, [])
-    mux.flush(job_id)
-    obs_flush = mux.drain_deferred_fleet().get(job_id, [])
-    _ship_anomalies()
-    job = mux.job(job_id)
+def _ship(result_q, job_id: str, wj: _WorkerJob) -> None:
+    """Flush a job's pending outputs to the parent: anomalies in push
+    order, then (in record mode) the keyed fleet observations gathered
+    since the last ship plus the job's frontier progress — even with no
+    new observations, progress is what lets the parent's frontier
+    advance past this job's healthy stretches."""
+    pend = wj.mux.stream.drain_raw()
+    if pend:
+        result_q.put(("anomalies", job_id,
+                      [(fa.ts, fa.anomaly) for fa in pend]))
+    obs = wj.mux.drain_fleet_observations().get(job_id, []) \
+        if wj.record_fleet else []
+    # shipped even with nothing to say: the envelope count is the
+    # parent's per-job acknowledgement (queue-depth gauges), and the
+    # progress float is what advances the parent's fleet frontier
+    result_q.put(("fleet", job_id, obs, wj.mux.fleet_progress(job_id)))
+
+
+def _close_job(result_q, job_id: str, wj: _WorkerJob) -> None:
+    """Flush + terminal envelope: the job's end state crosses once, in
+    the compact summary shape ``FleetMultiplexer.restore_job_state``
+    mirrors back."""
+    wj.mux.flush(job_id)
+    _ship(result_q, job_id, wj)
+    obs = wj.mux.drain_fleet_observations().get(job_id, []) \
+        if wj.record_fleet else []
+    job = wj.mux.job(job_id)
     result_q.put(("job", job_id, {
-        "stats": stats,
-        "obs_ingest": obs_ingest,
-        "obs_flush": obs_flush,
+        "stats": wj.stats,
+        "obs": obs,
         "state": {
             "store": job.store.summary(),
             "last_closed": job.last_closed,
             "hang_reported": job.hang_reported,
             "evaluated_steps": sorted(job.engine.evaluated_steps),
         },
-        "names": list(mux.interner.names),
-        "groups": list(mux.interner.groups),
-        "telemetry": mux.telemetry.snapshot(),
+        "names": list(wj.mux.interner.names),
+        "groups": list(wj.mux.interner.groups),
+        "telemetry": wj.mux.telemetry.snapshot(),
     }))
 
 
 def _worker_main(task_q, result_q, init: dict) -> None:
-    """Worker loop: pull job tasks until the shutdown sentinel.  An
-    exception in one job is shipped as an ``error`` envelope and the
-    worker moves on — partial fleet progress is never thrown away by
-    one bad job."""
+    """Resident worker loop: pull tasks until the shutdown sentinel,
+    holding every open job's pipeline between tasks.  An exception in
+    one task is shipped as an ``error`` envelope and the worker moves
+    on — partial fleet progress is never thrown away by one bad job.
+    The sentinel closes still-open jobs in sorted order (deterministic
+    terminal-envelope order for one-shot replay callers)."""
+    from repro.store import decode_batch_bytes
+
+    jobs: dict[str, _WorkerJob] = {}
     while True:
         task = task_q.get()
         if task is None:
             break
         kind, job_id, payload, engine_cfg, record_fleet = task
         try:
-            _run_job(result_q, kind, job_id, payload, engine_cfg,
-                     record_fleet, init)
+            if kind == TASK_CLOSE:
+                wj = jobs.pop(job_id, None)
+                if wj is None:
+                    wj = _WorkerJob(job_id, engine_cfg, False, init)
+                _close_job(result_q, job_id, wj)
+                continue
+            if kind not in (TASK_OPEN, TASK_REPLAY, TASK_BATCHES):
+                raise ValueError(f"unknown worker task kind {kind!r}")
+            wj = jobs.get(job_id)
+            if wj is None:
+                wj = jobs[job_id] = _WorkerJob(job_id, engine_cfg,
+                                               bool(record_fleet), init)
+            if kind == TASK_REPLAY:
+                wj.rep._replay_job(
+                    job_id, payload, wj.stats,
+                    on_file=lambda: _ship(result_q, job_id, wj))
+            elif kind == TASK_BATCHES:
+                for blob in payload:
+                    batch = decode_batch_bytes(blob)
+                    wj.stats.events += len(batch)
+                    wj.stats.per_job[job_id] = \
+                        wj.stats.per_job.get(job_id, 0) + len(batch)
+                    wj.mux.ingest_step_aligned(job_id, batch)
+                    _ship(result_q, job_id, wj)
+        except BaseException:
+            try:
+                result_q.put(("error", job_id, traceback.format_exc()))
+            except Exception:
+                break
+    for job_id in sorted(jobs):
+        try:
+            _close_job(result_q, job_id, jobs[job_id])
         except BaseException:
             try:
                 result_q.put(("error", job_id, traceback.format_exc()))
@@ -144,60 +199,149 @@ def _worker_main(task_q, result_q, init: dict) -> None:
 
 
 class ProcessWorkerPool:
-    """Fixed pool of job-replay worker processes.
+    """Fixed pool of resident job-pipeline worker processes.
 
-    One shared task queue (jobs outnumber workers; each worker pulls its
-    next job when free) and one BOUNDED result queue per worker — a
-    worker handles one job at a time, so the bound is a per-job result
-    budget: a parent that falls behind consuming anomalies stalls the
-    producing worker instead of buffering unboundedly.
+    Each worker has its OWN task queue; a job is pinned to one worker at
+    first submission (round-robin over workers), so a job's tasks always
+    execute in order on the engine that holds its state.  One BOUNDED
+    result queue per worker gives backpressure: a parent that falls
+    behind consuming anomalies stalls the producing worker instead of
+    buffering unboundedly.
 
-    Lifecycle: construct (forks/spawns immediately), ``submit`` every
-    task, then ``drain`` exactly once — it enqueues one shutdown
-    sentinel per worker, consumes every result, joins, and raises if
-    any worker errored or died.  ``close`` is the unconditional cleanup
-    (safe after ``drain``; terminates stragglers otherwise)."""
+    Two driving styles:
+
+    * **one-shot** (``FleetReplayer._replay_dir_process``): ``submit``
+      every task, then ``drain`` exactly once — it starts the drainer
+      threads, enqueues one shutdown sentinel per worker (closing every
+      still-open job), consumes every result, joins, and raises if any
+      worker errored or died.
+    * **resident** (``repro.serve.FleetService``): ``start`` the drainer
+      threads up front with callbacks, ``submit`` tasks for as long as
+      the service lives (``TASK_CLOSE`` retires one job), and finally
+      ``shutdown`` + ``join``.
+
+    ``close`` is the unconditional cleanup (safe after a drain/join;
+    terminates stragglers otherwise)."""
 
     def __init__(self, workers: int, init: dict, *, result_depth: int = 8,
                  mp_context=None):
         ctx = mp_context or mp.get_context()
-        self._task_q = ctx.Queue()
+        self._task_qs = []
         self._procs = []
         self._result_qs = []
         self._results: dict[str, dict] = {}
         self._errors: list[tuple[str, str]] = []
+        self._route: dict[str, int] = {}
+        self._next_worker = 0
+        self._drainers: list[threading.Thread] = []
+        self._shutdown_sent = False
+        self._obs_lock = threading.Lock()
+        # job -> [(key, step, anoms, ts)] in ship order, accumulated by
+        # the drainers when no on_fleet callback consumes them instead
+        self.fleet_observations: dict[str, list] = {}
+        self.fleet_progress: dict[str, float] = {}
+        self._on_anomalies: Optional[Callable] = None
+        self._on_fleet: Optional[Callable] = None
+        self._on_job: Optional[Callable] = None
+        self._on_error: Optional[Callable] = None
         for i in range(workers):
+            tq = ctx.Queue()
             rq = ctx.Queue(maxsize=max(result_depth, 2))
-            p = ctx.Process(target=_worker_main, args=(self._task_q, rq, init),
+            p = ctx.Process(target=_worker_main, args=(tq, rq, init),
                             daemon=True, name=f"flare-fleet-worker-{i}")
             p.start()
+            self._task_qs.append(tq)
             self._procs.append(p)
             self._result_qs.append(rq)
 
-    def submit(self, task) -> None:
-        self._task_q.put(task)
+    # ------------------------------------------------------------------ #
+    # submission / routing
+    # ------------------------------------------------------------------ #
+    def worker_for(self, job_id: str) -> int:
+        """The worker index a job is (or will be) pinned to."""
+        w = self._route.get(job_id)
+        if w is None:
+            w = self._route[job_id] = self._next_worker
+            self._next_worker = (self._next_worker + 1) % len(self._procs)
+        return w
 
-    def drain(self, on_anomalies: Optional[Callable] = None
-              ) -> dict[str, dict]:
-        """Consume every worker's results until all exit; returns
-        ``job_id -> terminal payload``.  ``on_anomalies(job_id, items)``
-        fires for each incremental anomaly envelope (items are ``(ts,
-        Anomaly)`` pairs in the worker's push order) — it may be called
-        from several drainer threads at once, one per worker, so it must
-        only touch internally-locked state (the anomaly stream is)."""
-        for _ in self._procs:
-            self._task_q.put(None)
-        threads = [threading.Thread(
-            target=self._drain_one, args=(p, rq, on_anomalies),
+    def submit(self, task) -> None:
+        """Enqueue one task on its job's pinned worker (pinning the job
+        round-robin on first sight)."""
+        self._task_qs[self.worker_for(task[1])].put(task)
+
+    def close_job(self, job_id: str) -> None:
+        """Graceful per-job leave: the worker flushes the job and ships
+        its terminal envelope (surfaced via ``on_job`` / ``results``)."""
+        self.submit((TASK_CLOSE, job_id, None, None, None))
+
+    def task_depths(self) -> list[int]:
+        """Approximate per-worker task-queue depths (-1 where the
+        platform can't say)."""
+        out = []
+        for q in self._task_qs:
+            try:
+                out.append(q.qsize())
+            except (NotImplementedError, OSError):
+                out.append(-1)
+        return out
+
+    @property
+    def results(self) -> dict[str, dict]:
+        """Terminal payloads received so far (job_id -> payload)."""
+        return self._results
+
+    # ------------------------------------------------------------------ #
+    # draining
+    # ------------------------------------------------------------------ #
+    def start(self, *, on_anomalies: Optional[Callable] = None,
+              on_fleet: Optional[Callable] = None,
+              on_job: Optional[Callable] = None,
+              on_error: Optional[Callable] = None) -> None:
+        """Start one drainer thread per worker (idempotent).  Callbacks
+        may fire from several drainer threads at once — one per worker —
+        so they must only touch internally-locked state:
+
+        * ``on_anomalies(job_id, [(ts, Anomaly), ...])`` — incremental,
+          in the worker's push order;
+        * ``on_fleet(job_id, obs, progress)`` — keyed fleet observations
+          plus frontier progress (when absent, both accumulate on
+          ``fleet_observations`` / ``fleet_progress`` instead);
+        * ``on_job(job_id, payload)`` — terminal envelope (always also
+          recorded in ``results``);
+        * ``on_error(job_id, tb)`` — when absent, errors collect and
+          ``join`` raises."""
+        if self._drainers:
+            return
+        self._on_anomalies = on_anomalies
+        self._on_fleet = on_fleet
+        self._on_job = on_job
+        self._on_error = on_error
+        self._drainers = [threading.Thread(
+            target=self._drain_one, args=(p, rq),
             daemon=True, name=f"flare-fleet-drain-{i}")
             for i, (p, rq) in enumerate(zip(self._procs, self._result_qs))]
-        for t in threads:
+        for t in self._drainers:
             t.start()
-        for t in threads:
+
+    def shutdown(self) -> None:
+        """Send every worker its shutdown sentinel (idempotent): each
+        closes its still-open jobs (terminal envelopes flow to the
+        drainers) and exits."""
+        if not self._shutdown_sent:
+            self._shutdown_sent = True
+            for q in self._task_qs:
+                q.put(None)
+
+    def join(self, *, raise_errors: bool = True) -> dict[str, dict]:
+        """Wait for the drainers and workers after ``shutdown``; raises
+        the first collected worker error (unless routed to ``on_error``
+        or ``raise_errors=False``); returns the terminal payloads."""
+        for t in self._drainers:
             t.join()
         for p in self._procs:
             p.join(timeout=10.0)
-        if self._errors:
+        if raise_errors and self._errors:
             job_id, tb = self._errors[0]
             more = f" (+{len(self._errors) - 1} more)" \
                 if len(self._errors) > 1 else ""
@@ -205,7 +349,17 @@ class ProcessWorkerPool:
                 f"fleet replay worker failed on job {job_id!r}{more}:\n{tb}")
         return self._results
 
-    def _drain_one(self, proc, rq, on_anomalies) -> None:
+    def drain(self, on_anomalies: Optional[Callable] = None
+              ) -> dict[str, dict]:
+        """One-shot drive: shutdown + consume everything + join; returns
+        ``job_id -> terminal payload``.  Shipped fleet observations and
+        progress accumulate on ``fleet_observations``/``fleet_progress``
+        for the caller to buffer afterwards."""
+        self.start(on_anomalies=on_anomalies)
+        self.shutdown()
+        return self.join()
+
+    def _drain_one(self, proc, rq) -> None:
         dead_polls = 0
         while True:
             try:
@@ -216,10 +370,10 @@ class ProcessWorkerPool:
                     # written just before an abnormal death
                     dead_polls += 1
                     if dead_polls >= 3:
-                        self._errors.append((
+                        self._record_error(
                             "<unknown>",
                             f"worker {proc.name} died without an exit "
-                            f"envelope (exitcode {proc.exitcode})"))
+                            f"envelope (exitcode {proc.exitcode})")
                         return
                 continue
             dead_polls = 0
@@ -227,12 +381,29 @@ class ProcessWorkerPool:
             if kind == "exit":
                 return
             if kind == "anomalies":
-                if on_anomalies is not None:
-                    on_anomalies(env[1], env[2])
+                if self._on_anomalies is not None:
+                    self._on_anomalies(env[1], env[2])
+            elif kind == "fleet":
+                if self._on_fleet is not None:
+                    self._on_fleet(env[1], env[2], env[3])
+                else:
+                    with self._obs_lock:
+                        if env[2]:
+                            self.fleet_observations.setdefault(
+                                env[1], []).extend(env[2])
+                        self.fleet_progress[env[1]] = env[3]
             elif kind == "job":
                 self._results[env[1]] = env[2]
+                if self._on_job is not None:
+                    self._on_job(env[1], env[2])
             elif kind == "error":
-                self._errors.append((env[1], env[2]))
+                self._record_error(env[1], env[2])
+
+    def _record_error(self, job_id: str, tb: str) -> None:
+        if self._on_error is not None:
+            self._on_error(job_id, tb)
+        else:
+            self._errors.append((job_id, tb))
 
     def close(self) -> None:
         for p in self._procs:
@@ -240,6 +411,6 @@ class ProcessWorkerPool:
                 p.terminate()
         for p in self._procs:
             p.join(timeout=5.0)
-        for q in (*self._result_qs, self._task_q):
+        for q in (*self._result_qs, *self._task_qs):
             q.close()
             q.cancel_join_thread()

@@ -90,6 +90,10 @@ class FleetJob:
     hang_reported: bool = False
     daemon: object = None
     anomaly_count: int = 0
+    # graceful leave: a departed job is fully diagnosed (flushed, hang
+    # checked, detectors finalized) and no longer holds back the fleet
+    # frontier; rows arriving afterwards are dropped and counted
+    departed: bool = False
     # per-job lock: jobs share no mutable state except the interner and
     # the anomaly stream (each locked internally), so concurrent daemon
     # threads diagnose different jobs in parallel instead of serializing
@@ -139,15 +143,25 @@ class FleetMultiplexer:
         self._lock = threading.RLock()    # job REGISTRY only; work is
         #                                   guarded by each job's own lock
         self._fleet_det_lock = threading.Lock()   # cross-job tier state
-        # parallel-replay support: while deferred, fleet-scope
-        # observations are buffered per job instead of hitting the
-        # (order-sensitive) cross-job detectors from racing worker
-        # threads; resolve_fleet_tier replays them deterministically
-        self._defer_fleet = False
+        # Fleet-tier frontier state.  Cross-job detectors are ORDER-
+        # sensitive (a correlation window closes against whichever
+        # observation arrived last), so observations are never fed to
+        # them in raw arrival order.  Every closed step's anomalies are
+        # buffered per job under a deterministic sort KEY — the job's
+        # running max of closed-step timestamps (a cummax, so keys are
+        # monotone per job regardless of per-step ts jitter) — and
+        # resolved in global ``(key, job_id, per-job order)`` order once
+        # the FRONTIER (min progress over active jobs) passes the key.
+        # Because every job's future keys are >= its current progress,
+        # each resolved batch is a prefix of the full sorted sequence:
+        # incremental (live) resolution and one-shot end-of-stream
+        # resolution produce byte-identical emissions.
+        self._fleet_buf: dict[str, list] = {}       # job -> [(key, step, anoms, ts)]
+        self._fleet_progress: dict[str, float] = {}  # job -> cummax closed ts
         # record mode: buffer observations even with no local fleet
-        # detectors (a worker process records for its parent's tier)
+        # detectors (a worker process records for its parent's tier) and
+        # never resolve locally — drain_fleet_observations ships them
         self._record_fleet = False
-        self._deferred_fleet: dict[str, list] = {}
 
     # ------------------------------------------------------------------ #
     # job registry
@@ -218,6 +232,12 @@ class FleetMultiplexer:
             return
         with self._lock:
             job = self._jobs.get(job_id) or self.add_job(job_id)
+        if job.departed:
+            # graceful-leave contract: a retired job's diagnosis is
+            # closed; stragglers are dropped and counted, never revived
+            self.telemetry.counter("fleet.departed_rows",
+                                   job=job_id).inc(len(batch))
+            return
         with job.lock:
             touched = job.store.append(batch)
             for s, nrows in touched.items():
@@ -226,6 +246,32 @@ class FleetMultiplexer:
                     job.store.drop_step(s)
             self._advance(job)
             self._maybe_hang(job)
+        self.resolve_fleet_ready()
+
+    def ingest_step_aligned(self, job_id: str, batch: EventBatch) -> None:
+        """Feed one decoded chunk as per-step slices in step order, so a
+        segment spanning many steps (a whole FCS file, a big wire frame)
+        advances the watermark incrementally instead of arriving as one
+        monolithic batch — diagnosis becomes independent of how the
+        stream happened to be chunked on disk or on the wire.
+        Single-step chunks pass straight through.
+
+        Step-sorted chunks (the overwhelmingly common shape) are sliced
+        as ZERO-COPY views (``slice_rows``); only genuinely interleaved
+        chunks pay the ``take`` permutation."""
+        order, uniq, bounds = batch.step_index()
+        if uniq.size <= 1:
+            self.ingest(job_id, batch)
+            return
+        if batch.is_step_sorted():
+            # sorted => the stable argsort is the identity, so bounds are
+            # direct row offsets into the original columns
+            for j in range(uniq.size):
+                self.ingest(job_id, batch.slice_rows(
+                    int(bounds[j]), int(bounds[j + 1])))
+            return
+        for j in range(uniq.size):
+            self.ingest(job_id, batch.take(order[bounds[j]:bounds[j + 1]]))
 
     @staticmethod
     def _job_ranks(job: FleetJob) -> int:
@@ -276,83 +322,99 @@ class FleetMultiplexer:
                                   0))
         job.pending_depth.set(len(job.store.pending_steps()))
 
-    def defer_fleet_tier(self, record: bool = False) -> None:
-        """Buffer fleet-scope observations instead of running them.
-
-        Cross-job detectors are ORDER-sensitive (a correlation window
-        closes against whichever observation arrived last), so parallel
-        replay workers racing into the tier would make fleet emissions
-        depend on thread scheduling.  While deferred, each closed step's
-        ``(step, anomalies, ts)`` is queued per job; call
-        :meth:`resolve_fleet_tier` after the workers join.
-
-        ``record=True`` buffers observations even when THIS multiplexer
-        has no fleet detectors: a replay worker process records its
-        job's observation sequence so the parent (which owns the real
-        detectors) can replay it via :meth:`buffer_fleet_observations` +
-        :meth:`resolve_fleet_tier`."""
+    # ------------------------------------------------------------------ #
+    # fleet tier: deterministic frontier resolution
+    # ------------------------------------------------------------------ #
+    def record_fleet_observations(self, on: bool = True) -> None:
+        """Record mode for worker processes: buffer observations even
+        when THIS multiplexer has no fleet detectors, and never resolve
+        locally.  :meth:`drain_fleet_observations` ships the keyed
+        sequence to the parent (which owns the real detectors)."""
         with self._fleet_det_lock:
-            self._defer_fleet = True
-            self._record_fleet = record
+            self._record_fleet = bool(on)
 
-    def drain_deferred_fleet(self) -> dict[str, list]:
-        """Take the buffered ``job_id -> [(step, anomalies, ts), ...]``
-        observations (deferral stays on).  A worker process calls this
-        to ship its job's sequence across the IPC boundary."""
+    def drain_fleet_observations(self) -> dict[str, list]:
+        """Take the buffered ``job_id -> [(key, step, anomalies, ts)]``
+        observations (recording stays on).  Keys are the per-job cummax
+        described in :meth:`resolve_fleet_ready`; shipping them (rather
+        than recomputing from the anomalous subset) keeps the parent's
+        global sort identical to an in-process run."""
         with self._fleet_det_lock:
-            deferred, self._deferred_fleet = self._deferred_fleet, {}
-        return deferred
+            out, self._fleet_buf = self._fleet_buf, {}
+        return out
 
     def buffer_fleet_observations(self, job_id: str, obs) -> None:
-        """Append recorded observations (a worker's shipped sequence)
-        to the deferred buffer for :meth:`resolve_fleet_tier`."""
+        """Append a worker's shipped ``[(key, step, anomalies, ts)]``
+        sequence (in per-job order) to the local buffer.  Keys are
+        re-cummaxed against anything already buffered for the job, so
+        incremental shipments concatenate cleanly."""
         if not obs:
             return
         with self._fleet_det_lock:
-            self._deferred_fleet.setdefault(job_id, []).extend(
-                (int(step), list(anoms), float(ts))
-                for step, anoms, ts in obs)
+            buf = self._fleet_buf.setdefault(job_id, [])
+            prog = self._fleet_progress.get(job_id, float("-inf"))
+            for key, step, anoms, ts in obs:
+                prog = max(prog, float(key))
+                buf.append((prog, int(step), list(anoms), float(ts)))
+            self._fleet_progress[job_id] = prog
 
-    def resolve_fleet_tier(self, job_order: Optional[list] = None) -> None:
-        """Stop deferring and replay the buffered observations through
-        the fleet tier job by job — exactly the sequence a serial
-        one-job-at-a-time replay produces, so the merged stream is
-        byte-equivalent to serial replay.  ``job_order`` must be the
-        order the serial path would have processed jobs in (the replayer
-        passes its sorted-path group order — job-REGISTRATION order is
-        not equivalent when callers pre-registered jobs differently);
-        ``None`` falls back to registration order."""
+    def note_fleet_progress(self, job_id: str, ts: float) -> None:
+        """Advance a job's fleet frontier (cummax) without an
+        observation — how a parent mirrors the progress a worker process
+        reports for anomaly-free stretches of a job's stream."""
         with self._fleet_det_lock:
-            self._defer_fleet = False
-            self._record_fleet = False
-            deferred, self._deferred_fleet = self._deferred_fleet, {}
-        if not deferred:
-            return
-        order = list(job_order) if job_order is not None \
-            else [j.job_id for j in self.jobs]
-        for job_id in order:
-            for step, anoms, ts in deferred.pop(job_id, ()):
-                self._observe_fleet(job_id, step, anoms, ts)
-        # observations for jobs outside the given order (shouldn't happen
-        # — replay passes every job it replayed) still reach the detectors
-        for job_id, obs in deferred.items():
-            for step, anoms, ts in obs:
-                self._observe_fleet(job_id, step, anoms, ts)
+            if ts > self._fleet_progress.get(job_id, float("-inf")):
+                self._fleet_progress[job_id] = float(ts)
 
-    def _observe_fleet(self, job_id: str, step: int, anoms: list,
-                       ts: float) -> None:
-        """Feed one closed step's anomalies to the fleet-scope tier and
-        push whatever it emits (tagged ``origin="fleet"``)."""
-        if not anoms or not (self.fleet_detectors or self._record_fleet):
-            return
-        # one lock for the whole tier: fleet detectors correlate ACROSS
-        # jobs, so unlike the per-job engines their state is shared by
-        # every ingest thread
+    def fleet_progress(self, job_id: str) -> float:
+        """The job's fleet-tier progress (cummax of closed-step ts)."""
         with self._fleet_det_lock:
-            if self._defer_fleet:
-                self._deferred_fleet.setdefault(job_id, []).append(
-                    (step, list(anoms), ts))
-                return
+            return self._fleet_progress.get(job_id, float("-inf"))
+
+    def _frontier_locked(self) -> float:
+        """Min progress over active (non-departed) jobs — the largest
+        key the global sorted observation order is already complete up
+        to.  Jobs that never closed a step pin it at -inf (their first
+        observation could sort anywhere); departed jobs don't count."""
+        lo = float("inf")
+        with self._lock:
+            jobs = list(self._jobs.values())
+        for j in jobs:
+            if j.departed:
+                continue
+            p = self._fleet_progress.get(j.job_id, float("-inf"))
+            if p < lo:
+                lo = p
+        return lo
+
+    def _resolve_locked(self, lo: float) -> None:
+        """Feed every buffered observation with key strictly below
+        ``lo`` to the fleet detectors, in ``(key, job_id, per-job
+        order)`` order.  Ties at the frontier are held back until every
+        active job's progress passes them (or the job departs), so
+        successive calls emit prefixes of one global total order."""
+        if not self.fleet_detectors:
+            return
+        batch: list = []
+        done: list[str] = []
+        for job_id, buf in self._fleet_buf.items():
+            n = 0
+            while n < len(buf) and buf[n][0] < lo:
+                n += 1
+            if n:
+                batch.extend((key, job_id, step, anoms, ts)
+                             for key, step, anoms, ts in buf[:n])
+                del buf[:n]
+            if not buf:
+                done.append(job_id)
+        for job_id in done:
+            del self._fleet_buf[job_id]
+        if not batch:
+            return
+        # stable sort: per-job buffers are already in order, so equal
+        # (key, job_id) pairs keep their per-job sequence
+        batch.sort(key=lambda r: (r[0], r[1]))
+        for key, job_id, step, anoms, ts in batch:
             for fd in self.fleet_detectors:
                 for jid, a in fd.observe_step(job_id, step, anoms, ts):
                     self.stream.push(jid, a, ts, origin="fleet")
@@ -360,6 +422,42 @@ class FleetMultiplexer:
                         j = self._jobs.get(jid)
                     if j is not None:
                         j.count_anomaly()
+
+    def resolve_fleet_ready(self) -> None:
+        """Resolve every fleet observation the frontier has passed —
+        this is what makes cross-job reclassification fire LIVE: call
+        it after ingest progress (the mux does so itself on ingest /
+        flush) or after buffering worker shipments."""
+        # unlocked fast path: nothing buffered (or no detectors) is the
+        # overwhelmingly common per-chunk case — a stale read just means
+        # the next call resolves, so ingest never serializes here
+        if not self.fleet_detectors or not self._fleet_buf:
+            return
+        with self._fleet_det_lock:
+            self._resolve_locked(self._frontier_locked())
+
+    def resolve_fleet_all(self) -> None:
+        """End-of-stream resolution: resolve everything still buffered
+        regardless of frontier.  ``replay_dir`` calls this when a
+        directory drain completes; ``finalize()`` calls it before the
+        detectors' own ``finalize()`` sweep."""
+        with self._fleet_det_lock:
+            self._resolve_locked(float("inf"))
+
+    def _observe_fleet(self, job_id: str, step: int, anoms: list,
+                       ts: float) -> None:
+        """Buffer one closed step's anomalies for the fleet-scope tier
+        (and advance the job's frontier progress).  Resolution happens
+        separately — see :meth:`resolve_fleet_ready`."""
+        if not (self.fleet_detectors or self._record_fleet):
+            return
+        with self._fleet_det_lock:
+            prog = max(self._fleet_progress.get(job_id, float("-inf")),
+                       float(ts))
+            self._fleet_progress[job_id] = prog
+            if anoms:
+                self._fleet_buf.setdefault(job_id, []).append(
+                    (prog, step, list(anoms), ts))
 
     def restore_job_state(self, job_id: str, state: dict) -> None:
         """Mirror a replay worker process's per-job end state onto this
@@ -412,6 +510,33 @@ class FleetMultiplexer:
             with job.lock:
                 self._advance(job, flush=True)
                 self._maybe_hang(job)
+        self.resolve_fleet_ready()
+
+    def retire_job(self, job_id: str) -> None:
+        """Graceful LEAVE of one job mid-run, without finalizing the
+        fleet: flush its pending steps, run its hang check, run its
+        engine's end-of-stream detector finalize, then mark it departed
+        — its frontier contribution becomes +inf (so buffered cross-job
+        observations from other jobs stop waiting on it) and any rows
+        that straggle in afterwards are dropped and counted
+        (``fleet.departed_rows{job=}``).  Deterministic: retiring a job
+        at its end of stream and finalizing the fleet later yields the
+        same merged output as one terminal ``finalize()`` (engine
+        finalize is idempotent; the stream drain order is
+        ``(ts, job_id, seq)``).  Anomalies stay queued for ``poll()``."""
+        job = self.job(job_id)
+        with job.lock:
+            if job.departed:
+                return
+            self._advance(job, flush=True)
+            self._maybe_hang(job)
+            for a in job.engine.finalize_detectors():
+                self.stream.push(job.job_id, a, job.store.last_ts)
+                job.count_anomaly()
+            job.departed = True
+        with self._fleet_det_lock:
+            self._fleet_progress[job_id] = float("inf")
+        self.resolve_fleet_ready()
 
     def finalize(self, job_id: Optional[str] = None) -> list[FleetAnomaly]:
         """``flush`` + end-of-stream detector finalize + drain: returns
@@ -424,11 +549,14 @@ class FleetMultiplexer:
                     self.stream.push(job.job_id, a, job.store.last_ts)
                     job.count_anomaly()
         if job_id is None:
+            self.resolve_fleet_all()
             with self._fleet_det_lock:
                 for fd in self.fleet_detectors:
                     for jid, a in fd.finalize():
                         self.stream.push(jid, a, self.stream_last_ts(jid),
                                          origin="fleet")
+        else:
+            self.resolve_fleet_ready()
         return self.stream.drain()
 
     def stream_last_ts(self, job_id: str) -> float:

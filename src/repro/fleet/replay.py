@@ -42,12 +42,15 @@ Either kind is byte-equivalent to serial replay:
     (and thus flush/finalize) order never depends on worker timing;
   * per-worker ``ReplayStats`` merge deterministically after the join
     (``per_job`` is emitted key-sorted either way);
-  * the order-sensitive fleet-scope detector tier is DEFERRED while
-    workers run and resolved job by job afterwards
-    (``FleetMultiplexer.defer_fleet_tier``), reproducing the serial
-    one-job-at-a-time observation sequence — process workers RECORD
-    their job's observations and ship them back for the same
-    resolution.
+  * the order-sensitive fleet-scope detector tier never sees raw
+    arrival order: observations are buffered under per-job cummax
+    timestamp keys and resolved in one global sorted order
+    (``FleetMultiplexer.resolve_fleet_all`` at the end of the drain) —
+    the same order the live ``FleetService`` resolves incrementally at
+    its frontier, so batch replay, parallel replay, and live streaming
+    all emit byte-identical fleet-tier reclassifications.  Process
+    workers RECORD their job's keyed observations and ship them back
+    for the same resolution.
 """
 from __future__ import annotations
 
@@ -202,30 +205,10 @@ class FleetReplayer:
         self.predicate = predicate
 
     def _ingest_step_aligned(self, job_id: str, batch) -> None:
-        """Feed one decoded chunk as per-step slices in step order, so a
-        whole-file segment (FCS, or any codec whose chunks span many
-        steps) advances the watermark incrementally instead of arriving
-        as one monolithic batch.  Single-step chunks — the common JSONL
-        case — pass straight through.
-
-        Step-sorted chunks (FCS segments written from step-ordered runs —
-        the overwhelmingly common shape) are sliced as ZERO-COPY views
-        (``slice_rows``): the engine aggregates straight off the decoded
-        memmap columns, no per-step ``take`` copy.  Only genuinely
-        interleaved chunks pay the permutation."""
-        order, uniq, bounds = batch.step_index()
-        if uniq.size <= 1:
-            self.mux.ingest(job_id, batch)
-            return
-        if batch.is_step_sorted():
-            # sorted => the stable argsort is the identity, so bounds are
-            # direct row offsets into the original columns
-            for j in range(uniq.size):
-                self.mux.ingest(job_id, batch.slice_rows(
-                    int(bounds[j]), int(bounds[j + 1])))
-            return
-        for j in range(uniq.size):
-            self.mux.ingest(job_id, batch.take(order[bounds[j]:bounds[j + 1]]))
+        """Step-aligned ingest — the logic lives on the multiplexer now
+        (``FleetMultiplexer.ingest_step_aligned``) so the live service
+        feeds wire frames through the exact same slicing."""
+        self.mux.ingest_step_aligned(job_id, batch)
 
     def replay_file(self, job_id: str, path: str,
                     stats: Optional[ReplayStats] = None) -> tuple[int, int]:
@@ -355,25 +338,22 @@ class FleetReplayer:
             # resolution order
             for job_id in groups:
                 self.mux.add_job(job_id)
-            self.mux.defer_fleet_tier()
-            try:
-                with ThreadPoolExecutor(
-                        workers, thread_name_prefix="flare-replay") as ex:
-                    futs = {job_id: ex.submit(self._replay_job, job_id,
-                                              jpaths, ReplayStats())
-                            for job_id, jpaths in groups.items()}
-                    # merge in sorted-path (group) order, not completion
-                    # order: totals are sums either way, but determinism
-                    # is the contract
-                    for job_id in groups:
-                        stats.merge(futs[job_id].result())
-            finally:
-                # resolve in THIS replay's group order — the order the
-                # serial path feeds the tier — not registration order,
-                # which differs when callers pre-registered jobs
-                self.mux.resolve_fleet_tier(job_order=list(groups))
+            with ThreadPoolExecutor(
+                    workers, thread_name_prefix="flare-replay") as ex:
+                futs = {job_id: ex.submit(self._replay_job, job_id,
+                                          jpaths, ReplayStats())
+                        for job_id, jpaths in groups.items()}
+                # merge in sorted-path (group) order, not completion
+                # order: totals are sums either way, but determinism
+                # is the contract
+                for job_id in groups:
+                    stats.merge(futs[job_id].result())
         if flush:
             self.mux.flush()
+        # a directory drain is an end of stream: resolve every buffered
+        # fleet-tier observation in the global sorted order (anomalies
+        # are ready at the caller's next poll(), no finalize needed)
+        self.mux.resolve_fleet_all()
         stats.seconds = time.perf_counter() - t0
         stats.per_job = dict(sorted(stats.per_job.items()))
         self._publish_telemetry(stats)
@@ -383,13 +363,15 @@ class FleetReplayer:
                             stats: ReplayStats) -> None:
         """Process-sharded replay: each job's pipeline runs in a worker
         process (``repro.fleet.ipc``); the parent re-pushes shipped
-        anomalies as they arrive (bounded queues give backpressure) and,
-        after the join, merges everything back DETERMINISTICALLY in
-        sorted-path group order — intern tables, telemetry, per-job end
-        state, stats — then replays the recorded fleet-tier observation
-        sequence through ``resolve_fleet_tier`` in the same two phases
-        serial replay produces: ingest-phase observations in group
-        order, flush-phase observations in registration order."""
+        anomalies as they arrive (bounded queues give backpressure),
+        buffers the workers' keyed fleet-tier observation shipments
+        (incremental ``"fleet"`` envelopes plus each job's terminal
+        remainder, concatenated in per-job ship order), and after the
+        join merges everything back DETERMINISTICALLY in sorted-path
+        group order — intern tables, telemetry, per-job end state,
+        stats.  ``resolve_fleet_all`` at the end of ``replay_dir`` then
+        sorts the merged observations into the same global order the
+        serial path produces."""
         from repro.fleet.ipc import TASK_REPLAY, ProcessWorkerPool
         mux = self.mux
         for job_id in groups:
@@ -435,13 +417,9 @@ class FleetReplayer:
             mux.telemetry.absorb(res["telemetry"])
             mux.restore_job_state(job_id, res["state"])
             stats.merge(res["stats"])
-        for job_id in groups:
-            mux.buffer_fleet_observations(job_id, results[job_id]["obs_ingest"])
-        mux.resolve_fleet_tier(job_order=list(groups))
-        reg_order = [j.job_id for j in mux.jobs]
-        for job_id in groups:
-            mux.buffer_fleet_observations(job_id, results[job_id]["obs_flush"])
-        mux.resolve_fleet_tier(job_order=reg_order)
+            mux.buffer_fleet_observations(
+                job_id, pool.fleet_observations.get(job_id, []))
+            mux.buffer_fleet_observations(job_id, res["obs"])
 
     def _publish_telemetry(self, stats: ReplayStats) -> None:
         """Land one replay's accounting in the multiplexer's telemetry

@@ -1,0 +1,520 @@
+"""FleetService — the always-on diagnosis daemon over the fleet engine.
+
+``FleetReplayer.replay_dir`` is a one-shot drain over a finished
+directory; this module keeps the same engine RESIDENT.  One service
+instance owns a :class:`~repro.fleet.multiplexer.FleetMultiplexer` and
+feeds it from two ingestion planes for as long as it lives:
+
+  * **socket** — an FLW listener (``repro.serve.protocol``): training
+    hosts ``HELLO`` a job (with topology for the fleet tier), stream
+    ``BATCH`` frames (FCS-encoded ``EventBatch`` segments — the exact
+    bytes the spill path writes), and ``BYE`` to leave gracefully;
+  * **file tail** — a :class:`~repro.serve.tail.FileTailer` following
+    the directory daemons spill into, feeding newly completed segments.
+
+Both planes route into step-aligned ingest
+(``FleetMultiplexer.ingest_step_aligned``) on one of two engines:
+
+  * ``worker_kind="inline"`` — decode + diagnose on the service's own
+    multiplexer (per-job locks already parallelize connection threads);
+  * ``worker_kind="process"`` — frames cross *undecoded* into a
+    resident :class:`~repro.fleet.ipc.ProcessWorkerPool` (each job
+    pinned to a worker process holding its private engine), anomalies
+    and keyed fleet-tier observations streaming back over bounded
+    queues.  The parent buffers the observations and resolves its
+    cross-job frontier incrementally (``resolve_fleet_ready``), so
+    ``cross_job_failslow`` reclassifies LIVE in either mode.
+
+Determinism contract (asserted in ``benchmarks/live.py`` and
+``tests/test_serve.py``): streaming a recorded directory through either
+plane, in either mode, then :meth:`finalize`, yields an anomaly
+sequence byte-equivalent (after the stream's own ``(ts, job_id, seq)``
+merge sort) to ``replay_dir`` + ``finalize`` on the same files — with
+the documented caveats that the fleet frontier assumes the job set is
+hello'd before its watermarks pass, and hang diagnosis (which fires on
+flush granularity) needs hang-free scenarios for bit-exact gates.
+
+A minimal HTTP query plane (``repro.serve.query``) serves
+``/anomalies``, ``/weather``, ``/telemetry``, ``/jobs`` and byte-
+budgeted archive queries over the same state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import socket
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+from repro.core.engine import EngineConfig
+from repro.fleet.multiplexer import FleetMultiplexer
+from repro.fleet.replay import ReplayStats
+from repro.fleet.stream import FleetAnomaly
+from repro.serve.protocol import (FRAME_BATCH, FRAME_HELLO, ProtocolError,
+                                  parse_hello, read_frame)
+from repro.serve.tail import FileTailer
+from repro.store import CodecError, decode_batch_bytes, encode_batch_bytes
+
+
+@dataclass
+class ServiceConfig:
+    host: str = "127.0.0.1"
+    # FLW ingest port: 0 = ephemeral (read it back from ``.port``),
+    # None = no socket plane (tail-only service)
+    port: Optional[int] = 0
+    # HTTP query port: 0 = ephemeral, None = no query plane
+    query_port: Optional[int] = None
+    worker_kind: str = "inline"        # "inline" | "process"
+    workers: Optional[int] = None      # process mode: None = cpu count
+    tail_dir: Optional[str] = None     # follow this spill directory
+    tail_poll_s: float = 0.05
+    # socket recv timeout at frame boundaries — how often an idle
+    # connection polls for service shutdown
+    idle_poll_s: float = 0.2
+    drain_interval_s: float = 0.05     # anomaly collector period
+    max_recent_anomalies: int = 4096   # /anomalies ring size
+    archive_dir: Optional[str] = None  # /archive/* query root
+    archive_max_bytes: Optional[int] = 64 << 20   # per-query byte budget
+    # engine template for jobs that HELLO without overrides
+    default_engine: Optional[EngineConfig] = None
+
+
+class FleetService:
+    """Long-lived ingest + query service over one fleet multiplexer.
+
+    ``on_anomaly(fa, arrival_monotonic)`` (optional) fires for every
+    collected anomaly with its collection time — the hook the latency
+    benchmark hangs off; the service itself keeps only a bounded ring
+    (``recent_anomalies``), so memory stays flat over months."""
+
+    def __init__(self, mux: Optional[FleetMultiplexer] = None,
+                 config: Optional[ServiceConfig] = None,
+                 *, on_anomaly: Optional[Callable] = None):
+        self.cfg = config or ServiceConfig()
+        if self.cfg.worker_kind not in ("inline", "process"):
+            raise ValueError(f"worker_kind must be 'inline' or 'process', "
+                             f"got {self.cfg.worker_kind!r}")
+        self.mux = mux or FleetMultiplexer()
+        self.telemetry = self.mux.telemetry
+        self.on_anomaly = on_anomaly
+        self.stats = ReplayStats(worker_kind=f"live-{self.cfg.worker_kind}")
+        self.tailer: Optional[FileTailer] = None
+        self._pool = None
+        self._record_fleet = bool(self.mux.fleet_detectors)
+        self._stop = threading.Event()
+        self._started = False
+        self._finalized = False
+        self._reg_lock = threading.Lock()     # open-jobs registry
+        self._merge_lock = threading.Lock()   # terminal-payload merges
+        self._open: set[str] = set()
+        self._departed: set[str] = set()
+        self._job_cfg: dict[str, Optional[EngineConfig]] = {}
+        self._errors: list[tuple[str, str]] = []
+        self._rec_lock = threading.Lock()
+        self.recent_anomalies: deque[FleetAnomaly] = deque(
+            maxlen=self.cfg.max_recent_anomalies)
+        self._inflight: dict[str, int] = {}   # process mode: frames queued
+        self._lsock: Optional[socket.socket] = None
+        self._threads: list[threading.Thread] = []
+        self._conn_threads: list[threading.Thread] = []
+        self._active_conns = 0
+        self._query = None
+        self.port: Optional[int] = None
+        self.query_port: Optional[int] = None
+        t = self.telemetry
+        self._c_conns = t.counter("serve.connections")
+        self._c_frames = t.counter("serve.frames")
+        self._c_bytes = t.counter("serve.bytes_in")
+        self._c_dropped = t.counter("serve.dropped_frames")
+        self._g_active = t.gauge("serve.active_connections")
+        self._g_jobs = t.gauge("serve.jobs")
+
+    # ------------------------------------------------------------------ #
+    # lifecycle
+    # ------------------------------------------------------------------ #
+    def start(self) -> "FleetService":
+        if self._started:
+            return self
+        self._started = True
+        if self.cfg.worker_kind == "process":
+            self._start_pool()
+        if self.cfg.port is not None:
+            self._lsock = socket.create_server(
+                (self.cfg.host, self.cfg.port))
+            self._lsock.settimeout(self.cfg.idle_poll_s)
+            self.port = self._lsock.getsockname()[1]
+            self._spawn(self._accept_loop, "flare-serve-accept")
+        if self.cfg.tail_dir is not None:
+            self.tailer = FileTailer(
+                self.cfg.tail_dir, self._tail_sink,
+                on_join=self.join_job, telemetry=self.telemetry)
+            self._spawn(lambda: self.tailer.run(
+                self._stop, self.cfg.tail_poll_s), "flare-serve-tail")
+        self._spawn(self._collect_loop, "flare-serve-collect")
+        if self.cfg.query_port is not None:
+            from repro.serve.query import QueryServer
+            self._query = QueryServer(self, self.cfg.host,
+                                      self.cfg.query_port)
+            self.query_port = self._query.port
+        return self
+
+    def _spawn(self, target, name: str) -> None:
+        t = threading.Thread(target=target, daemon=True, name=name)
+        t.start()
+        self._threads.append(t)
+
+    def _start_pool(self) -> None:
+        import os
+
+        from repro.fleet.ipc import ProcessWorkerPool
+        mux = self.mux
+        init = {
+            "history": mux.history,
+            "fleet": {"watermark_delay": mux.cfg.watermark_delay,
+                      "backend": mux.cfg.backend,
+                      "max_pending_rows": mux.cfg.max_pending_rows},
+            "replay": {"chunk_bytes": 8 << 20, "max_workers": None,
+                       "executor": "thread", "serial_below": None,
+                       "prefetch": 2, "predicate": None},
+        }
+        workers = self.cfg.workers or os.cpu_count() or 1
+        self._pool = ProcessWorkerPool(workers, init)
+        self._pool.start(on_anomalies=self._on_worker_anomalies,
+                         on_fleet=self._on_worker_fleet,
+                         on_job=self._on_worker_job,
+                         on_error=self._on_worker_error)
+
+    def finalize(self, *, raise_errors: bool = True) -> list[FleetAnomaly]:
+        """Graceful shutdown: stop accepting, drain the tail directory to
+        its end (leftover partial tails become corruption counts), close
+        every worker job, finalize the multiplexer.  Returns the final
+        drain (everything not yet collected); the full stream was
+        delivered incrementally via ``on_anomaly``/``recent_anomalies``.
+        Idempotent."""
+        if self._finalized:
+            return []
+        self._finalized = True
+        self._stop.set()
+        if self._lsock is not None:
+            try:
+                self._lsock.close()
+            except OSError:
+                pass
+        for t in self._threads:
+            t.join(timeout=30.0)
+        for t in self._conn_threads:
+            t.join(timeout=30.0)
+        if self._pool is not None:
+            # sentinel closes still-open jobs; terminal envelopes merge
+            # through _on_worker_job before join returns
+            self._pool.shutdown()
+            self._pool.join(raise_errors=False)
+            self._pool.close()
+        if self.tailer is not None:
+            self.tailer.finish()           # no-op if the run thread did
+            with self._merge_lock:
+                self.stats.merge(self.tailer.stats)
+        final = self.mux.finalize()
+        self._deliver(final)
+        if self._query is not None:
+            self._query.close()
+        if raise_errors and self._errors:
+            job_id, tb = self._errors[0]
+            more = f" (+{len(self._errors) - 1} more)" \
+                if len(self._errors) > 1 else ""
+            raise RuntimeError(
+                f"fleet service worker failed on job {job_id!r}{more}:\n{tb}")
+        return final
+
+    @property
+    def errors(self) -> list[tuple[str, str]]:
+        return list(self._errors)
+
+    # ------------------------------------------------------------------ #
+    # job lifecycle + ingest (both planes land here)
+    # ------------------------------------------------------------------ #
+    def _engine_cfg(self, overrides: Optional[dict]) -> Optional[EngineConfig]:
+        if overrides:
+            base = self.cfg.default_engine
+            if base is not None:
+                return dataclasses.replace(base, **overrides)
+            return EngineConfig(**overrides)
+        return self.cfg.default_engine
+
+    def join_job(self, job_id: str, topology: Optional[dict] = None,
+                 engine: Optional[dict] = None) -> None:
+        """Register a job (idempotent; re-HELLO just merges topology).
+        In process mode the job's resident pipeline opens eagerly, so
+        its first frame pays no engine construction."""
+        with self._reg_lock:
+            if job_id in self._departed:
+                return                 # departed jobs are never revived
+            known = job_id in self._open
+            if not known:
+                self._open.add(job_id)
+                self._job_cfg[job_id] = self._engine_cfg(engine)
+            self._g_jobs.set(len(self._open))
+        if topology:
+            self.mux.set_topology(job_id, **topology)
+        if known:
+            return
+        self.mux.add_job(job_id, self._job_cfg[job_id])
+        if self._pool is not None:
+            from repro.fleet.ipc import TASK_OPEN
+            self._pool.submit((TASK_OPEN, job_id, None,
+                               self._job_cfg[job_id], self._record_fleet))
+
+    def leave_job(self, job_id: str) -> None:
+        """Graceful leave (``BYE``): the job's pending steps close, its
+        hang analysis and detector finalize run, its fleet-frontier
+        contribution releases — other jobs' diagnosis is untouched."""
+        with self._reg_lock:
+            if job_id not in self._open:
+                return
+            self._open.discard(job_id)
+            self._departed.add(job_id)
+            self._g_jobs.set(len(self._open))
+        if self._pool is not None:
+            # the worker flushes + ships the terminal envelope; the
+            # parent-side retire happens in _on_worker_job when it lands
+            self._pool.close_job(job_id)
+        else:
+            self.mux.retire_job(job_id)
+
+    def ingest_frame(self, job_id: str, payload: bytes) -> None:
+        """One BATCH frame: an FCS-encoded ``EventBatch`` segment.
+        Inline mode decodes here (a ``CodecError`` propagates — the
+        connection handler counts it as a dropped frame); process mode
+        forwards the bytes undecoded to the job's pinned worker."""
+        with self._reg_lock:
+            known = job_id in self._open
+            departed = job_id in self._departed
+        self._c_frames.inc()
+        self._c_bytes.inc(len(payload))
+        if departed:
+            # graceful-leave contract: post-BYE stragglers are dropped
+            # and counted, never revived — and never forwarded to a
+            # worker, whose closed pipeline they would silently reopen
+            # (in process mode the parent mux only marks the job
+            # departed once the terminal envelope lands, so the mux
+            # guard alone is racy; the service set is authoritative)
+            n = len(decode_batch_bytes(bytes(payload)))
+            self.telemetry.counter("fleet.departed_rows",
+                                   job=job_id).inc(n)
+            return
+        if not known:
+            self.join_job(job_id)
+        if self._pool is not None:
+            self._note_inflight(job_id, +1)
+            self._pool.submit(("batches", job_id, [bytes(payload)],
+                               self._job_cfg.get(job_id),
+                               self._record_fleet))
+            return
+        batch = decode_batch_bytes(bytes(payload))
+        self._count_events(job_id, len(batch))
+        self.mux.ingest_step_aligned(job_id, batch)
+
+    def _tail_sink(self, job_id: str, batch) -> None:
+        """Tail plane: newly completed segments (already decoded for the
+        boundary check) — process mode re-frames them as FCS bytes so
+        the worker boundary stays zero-pickle."""
+        with self._reg_lock:
+            departed = job_id in self._departed
+        if departed:
+            self.telemetry.counter("fleet.departed_rows",
+                                   job=job_id).inc(len(batch))
+            return
+        if self._pool is not None:
+            self._note_inflight(job_id, +1)
+            self._pool.submit(("batches", job_id,
+                               [encode_batch_bytes(batch)],
+                               self._job_cfg.get(job_id),
+                               self._record_fleet))
+            return
+        self.mux.ingest_step_aligned(job_id, batch)
+
+    def _count_events(self, job_id: str, n: int) -> None:
+        with self._merge_lock:
+            self.stats.events += n
+            self.stats.per_job[job_id] = \
+                self.stats.per_job.get(job_id, 0) + n
+
+    def _note_inflight(self, job_id: str, d: int) -> None:
+        with self._reg_lock:
+            n = max(self._inflight.get(job_id, 0) + d, 0)
+            self._inflight[job_id] = n
+        self.telemetry.gauge("serve.inflight", job=job_id).set(n)
+
+    def queue_depths(self) -> dict:
+        """Per-job frames submitted but not yet acknowledged by their
+        worker (process mode; empty inline) plus per-worker task-queue
+        depths — the ``/telemetry`` queue view."""
+        with self._reg_lock:
+            per_job = dict(sorted(self._inflight.items()))
+        workers = self._pool.task_depths() if self._pool is not None else []
+        return {"per_job": per_job, "workers": workers}
+
+    # ------------------------------------------------------------------ #
+    # process-pool callbacks (drainer threads)
+    # ------------------------------------------------------------------ #
+    def _on_worker_anomalies(self, job_id: str, items) -> None:
+        job = self.mux.job(job_id)
+        for ts, a in items:
+            self.mux.stream.push(job_id, a, ts)
+            job.count_anomaly()
+
+    def _on_worker_fleet(self, job_id: str, obs, progress: float) -> None:
+        # one envelope per ingested frame: the ack that drives the
+        # queue-depth gauge, the observations + progress that advance
+        # the parent's cross-job frontier
+        self.mux.buffer_fleet_observations(job_id, obs)
+        self.mux.note_fleet_progress(job_id, progress)
+        self.mux.resolve_fleet_ready()
+        self._note_inflight(job_id, -1)
+
+    def _on_worker_job(self, job_id: str, res: dict) -> None:
+        with self._merge_lock:
+            self.mux.interner.merge_tables(res["names"], res["groups"])
+            self.mux.telemetry.absorb(res["telemetry"])
+            self.mux.restore_job_state(job_id, res["state"])
+            self.stats.merge(res["stats"])
+            self.mux.buffer_fleet_observations(job_id, res["obs"])
+        self.mux.retire_job(job_id)
+
+    def _on_worker_error(self, job_id: str, tb: str) -> None:
+        self._errors.append((job_id, tb))
+        self._note_inflight(job_id, -1)
+
+    # ------------------------------------------------------------------ #
+    # socket plane
+    # ------------------------------------------------------------------ #
+    def _accept_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                conn, _addr = self._lsock.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                return                     # listener closed: shutting down
+            t = threading.Thread(target=self._serve_conn, args=(conn,),
+                                 daemon=True, name="flare-serve-conn")
+            t.start()
+            self._conn_threads.append(t)
+
+    def _serve_conn(self, conn: socket.socket) -> None:
+        self._c_conns.inc()
+        with self._reg_lock:
+            self._active_conns += 1
+            self._g_active.set(self._active_conns)
+        conn.settimeout(self.cfg.idle_poll_s)
+        try:
+            while True:
+                fr = read_frame(conn, stop=self._stop.is_set)
+                if fr is None:
+                    return                  # clean EOF / clean shutdown
+                ftype, job_id, payload = fr
+                if ftype == FRAME_HELLO:
+                    body = parse_hello(payload)
+                    self.join_job(str(body.get("job_id") or job_id),
+                                  topology=body.get("topology"),
+                                  engine=body.get("engine"))
+                elif ftype == FRAME_BATCH:
+                    try:
+                        self.ingest_frame(job_id, payload)
+                    except CodecError as e:
+                        raise ProtocolError(
+                            f"undecodable BATCH payload ({e})") from e
+                else:
+                    self.leave_job(job_id)
+        except ProtocolError:
+            # torn or corrupt input: count it and drop the connection —
+            # resynchronizing a corrupt stream means guessing, and the
+            # spill/tail plane is the recovery path
+            self._c_dropped.inc()
+        except OSError:
+            pass
+        finally:
+            try:
+                conn.close()
+            except OSError:
+                pass
+            with self._reg_lock:
+                self._active_conns -= 1
+                self._g_active.set(self._active_conns)
+
+    # ------------------------------------------------------------------ #
+    # anomaly collection
+    # ------------------------------------------------------------------ #
+    def _deliver(self, fas: list[FleetAnomaly]) -> None:
+        if not fas:
+            return
+        with self._rec_lock:
+            self.recent_anomalies.extend(fas)
+        if self.on_anomaly is not None:
+            now = time.monotonic()
+            for fa in fas:
+                self.on_anomaly(fa, now)
+
+    def collect(self) -> list[FleetAnomaly]:
+        """Drain newly diagnosed anomalies into the recent ring (and the
+        ``on_anomaly`` hook); the collector thread calls this every
+        ``drain_interval_s``, tests may call it directly."""
+        fas = self.mux.poll()
+        self._deliver(fas)
+        return fas
+
+    def _collect_loop(self) -> None:
+        while not self._stop.wait(self.cfg.drain_interval_s):
+            self.collect()
+
+    def snapshot_recent(self, n: Optional[int] = None) -> list[FleetAnomaly]:
+        with self._rec_lock:
+            out = list(self.recent_anomalies)
+        return out[-n:] if n else out
+
+    # ------------------------------------------------------------------ #
+    # query-plane views
+    # ------------------------------------------------------------------ #
+    def job_stats(self) -> dict:
+        """Per-job engine stats + live service view (open/departed,
+        queued frames)."""
+        stats = self.mux.stats()
+        with self._reg_lock:
+            open_jobs = set(self._open)
+            inflight = dict(self._inflight)
+        for job in self.mux.jobs:
+            row = stats.setdefault(job.job_id, {})
+            row["open"] = job.job_id in open_jobs
+            row["departed"] = job.departed
+            row["queued_frames"] = inflight.get(job.job_id, 0)
+        return stats
+
+    def weather(self) -> dict:
+        """Cluster-weather summary over the recent ring: what the fleet
+        looks like right now, one JSON object."""
+        recent = self.snapshot_recent()
+        by_kind: dict[str, int] = {}
+        by_team: dict[str, int] = {}
+        by_job: dict[str, int] = {}
+        reclass = 0
+        for fa in recent:
+            k = getattr(fa.anomaly.kind, "value", str(fa.anomaly.kind))
+            t = getattr(fa.anomaly.team, "value", str(fa.anomaly.team))
+            by_kind[k] = by_kind.get(k, 0) + 1
+            by_team[t] = by_team.get(t, 0) + 1
+            by_job[fa.job_id] = by_job.get(fa.job_id, 0) + 1
+        reclass = sum(1 for fa in recent if fa.origin == "fleet")
+        with self._reg_lock:
+            open_jobs = len(self._open)
+        return {
+            "jobs_open": open_jobs,
+            "jobs_total": len(self.mux.jobs),
+            "anomalies_recent": len(recent),
+            "fleet_reclassified_recent": reclass,
+            "by_kind": dict(sorted(by_kind.items())),
+            "by_team": dict(sorted(by_team.items())),
+            "by_job": dict(sorted(by_job.items())),
+            "events_ingested": self.stats.events,
+        }

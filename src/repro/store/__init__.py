@@ -16,8 +16,10 @@ from repro.store.base import (CodecError, TraceCodec, codec_for_path,
 from repro.store.compress import have_zstd
 from repro.store.fcs import (FcsCodec, FcsV2Codec, FcsV3Codec,
                              decode_batch_bytes, encode_batch_bytes,
-                             read_fcs, segment_stats, write_fcs)
-from repro.store.jsonl import (JsonlCodec, iter_jsonl_chunks, read_jsonl,
+                             read_fcs, segment_stats,
+                             tail_complete_segments, write_fcs)
+from repro.store.jsonl import (JsonlCodec, decode_jsonl_lines,
+                               iter_jsonl_chunks, read_jsonl,
                                read_jsonl_chunked)
 from repro.store.stats import (SEVERITY_KINDS, STAT_COLUMNS, Predicate,
                                ScanStats, SegmentStats)
@@ -55,9 +57,11 @@ __all__ = [
     "FcsV3Codec", "JSONL", "FCS", "FCS2", "FCS3", "have_zstd",
     "register_codec", "get_codec", "codecs", "codec_for_path",
     "sniff_format", "read_trace", "write_trace", "iter_trace_chunks",
-    "read_jsonl", "read_jsonl_chunked", "iter_jsonl_chunks", "read_fcs",
+    "read_jsonl", "read_jsonl_chunked", "iter_jsonl_chunks",
+    "decode_jsonl_lines", "read_fcs",
     "write_fcs", "encode_batch_bytes", "decode_batch_bytes",
-    "segment_stats", "Predicate", "ScanStats", "SegmentStats",
+    "segment_stats", "tail_complete_segments",
+    "Predicate", "ScanStats", "SegmentStats",
     "SEVERITY_KINDS", "STAT_COLUMNS", "SegmentedTraceWriter", "seg_path",
     "seg_index", "job_id_for_path", "is_sidecar_path", "ROLLUP_SUFFIX",
 ]

@@ -683,6 +683,47 @@ def encode_batch_bytes(batch: EventBatch, *, version: int = VERSION_V2,
                           level=level)
 
 
+def tail_complete_segments(path: str, offset: int = 0
+                           ) -> tuple[list[EventBatch], int]:
+    """Tail a GROWING FCS stream: decode every segment that is complete
+    on disk at/after byte ``offset`` and return ``(batches,
+    new_offset)``, leaving a partial trailing segment (a write in
+    flight, or fewer bytes than a header) for the next call — resume by
+    passing ``new_offset`` back in.  This is how a live tailer follows a
+    :class:`~repro.store.writer.SegmentedTraceWriter` file without ever
+    racing the writer's appends: segment boundaries are the commit
+    points.  Structural corruption at a completed offset (bad magic,
+    bad version, CRC) raises :class:`CodecError` exactly like
+    :func:`iter_segments` — a torn tail that never completes is the
+    CALLER's corruption signal at end of stream."""
+    with open(path, "rb") as f:
+        f.seek(offset)
+        data = f.read()
+    out: list[EventBatch] = []
+    off = 0
+    size = len(data)
+    while size - off >= _HEADER.size:
+        magic, _version, _ncols, _n, seg_len = \
+            _HEADER.unpack_from(data, off)[:5]
+        if magic != MAGIC:
+            raise CodecError(f"bad magic {magic!r} (expected {MAGIC!r})",
+                             path=path, offset=offset + off)
+        if seg_len < _HEADER.size:
+            raise CodecError(f"implausible segment length {seg_len}",
+                             path=path, offset=offset + off)
+        if off + seg_len > size:
+            break                    # incomplete tail: write in flight
+        try:
+            batch, off = decode_segment(data, off, path)
+        except CodecError:
+            raise
+        except (struct.error, IndexError, ValueError, KeyError) as e:
+            raise CodecError(f"corrupt segment ({type(e).__name__}: {e})",
+                             path=path, offset=offset + off) from e
+        out.append(batch)
+    return out, offset + off
+
+
 def decode_batch_bytes(buf) -> EventBatch:
     """Decode one or more concatenated FCS segments from an in-memory
     buffer (bytes/memoryview) into a single batch.  The inverse of

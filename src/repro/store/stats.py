@@ -139,12 +139,16 @@ class SegmentStats:
 class ScanStats:
     """Accounting for one pruned scan: how much the pushdown actually
     saved.  ``bytes_decoded`` counts the on-disk bytes of segments that
-    were decoded; ``bytes_skipped`` those hopped over on stats alone."""
+    were decoded; ``bytes_skipped`` those hopped over on stats alone.
+    ``truncated`` flags a scan that stopped early because it hit a
+    caller-imposed byte budget — the result is an honest PREFIX of the
+    full answer, not the full answer."""
     segments: int = 0
     segments_skipped: int = 0
     bytes_decoded: int = 0
     bytes_skipped: int = 0
     rows: int = 0
+    truncated: bool = False
 
     def merge(self, other: "ScanStats") -> None:
         self.segments += other.segments
@@ -152,6 +156,7 @@ class ScanStats:
         self.bytes_decoded += other.bytes_decoded
         self.bytes_skipped += other.bytes_skipped
         self.rows += other.rows
+        self.truncated = self.truncated or other.truncated
 
 
 def compute_stats(arrays: Sequence[np.ndarray], float_nulls_nan: bool = True

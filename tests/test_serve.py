@@ -1,0 +1,592 @@
+"""Live fleet service tests (ISSUE 9).
+
+Covered:
+  * FLW wire protocol: roundtrip, clean EOF, torn frame, corrupt
+    magic/CRC, hello payload validation;
+  * socket ingest (inline AND process workers) byte-equivalent to
+    ``replay_dir`` on the same recorded traces — anomaly stream, stats
+    signature, and ``cross_job_failslow`` reclassifications;
+  * file-tail ingest equivalence, including growing files (segment
+    boundaries as commit points), rotation, truncated tails and
+    structural corruption counted like replay;
+  * graceful join/leave mid-run: a departing job's diagnosis closes
+    without disturbing the other jobs'; post-leave frames drop counted;
+  * ``FleetMultiplexer.retire_job`` equivalence to one terminal
+    finalize;
+  * torn-frame / corrupt-frame connections counted and dropped without
+    hurting healthy connections;
+  * the daemon's ``live_endpoint`` sink (ships real drains; counted
+    drops against a dead service, never an exception);
+  * archive per-query byte budgets (``max_bytes`` -> honest truncated
+    prefix) and the HTTP query plane.
+"""
+import json
+import os
+import socket
+import time
+import urllib.error
+import urllib.request
+
+import pytest
+
+from repro import store as trace_store
+from repro.configs import get_config
+from repro.core.daemon import DaemonConfig, TracingDaemon
+from repro.core.engine import DiagnosticEngine, EngineConfig
+from repro.core.events import EventKind
+from repro.core.history import HistoryStore
+from repro.core.telemetry import TelemetryRegistry
+from repro.core.timeline import (ClusterSimulator, Injection,
+                                 program_from_config)
+from repro.fleet import FleetConfig, FleetMultiplexer, FleetReplayer
+from repro.serve import (FRAME_BATCH, FleetService, LiveBatchSink,
+                         LiveClient, ProtocolError, ServiceConfig,
+                         batch_frame, bye_frame, encode_frame, hello_frame,
+                         parse_hello, read_frame)
+from repro.serve.tail import FileTailer
+from repro.store import CodecError, tail_complete_segments
+
+N = 4           # ranks: small fleet, fast tests
+STEPS = 8
+
+
+@pytest.fixture(scope="module")
+def world():
+    cfg = get_config("llama-20b-paper")
+    prog = program_from_config(cfg, num_chips=N)
+    store = HistoryStore()
+    eng = DiagnosticEngine(
+        EngineConfig(backend="dense-train", num_ranks=N), store)
+    for seed in range(3):
+        eng.ingest_batch(ClusterSimulator(N, prog, seed=seed).run_batch(3))
+    eng.learn_healthy()
+    return prog, store
+
+
+def _mk_jobs(prog, jobs=4, steps=STEPS):
+    """Hang-free mixed fleet: first half jitters on shared racks (the
+    cross-job tier's trigger), rest healthy.  Returns per-job step
+    chunks + topology."""
+    chunk_lists, topo = {}, {}
+    for i in range(jobs):
+        inj = [Injection(kind="network_jitter", factor=3.0, start_step=3)] \
+            if i < jobs // 2 else []
+        sim = ClusterSimulator(N, prog, seed=100 + i, injections=inj)
+        batch = sim.run_batch(steps)
+        jid = f"lv{i:02d}-{'jit' if i < jobs // 2 else 'ok'}"
+        order, uniq, bounds = batch.step_index()
+        chunk_lists[jid] = [batch.take(order[bounds[j]:bounds[j + 1]])
+                            for j in range(uniq.size)]
+        topo[jid] = {"rack": f"r{i // 2}", "switch": f"s{i // 4}"}
+    return chunk_lists, topo
+
+
+def _write_logs(logdir, chunk_lists, codec="fcs"):
+    for jid, chunks in chunk_lists.items():
+        path = os.path.join(logdir, f"{jid}.{codec}")
+        for c in chunks:
+            trace_store.write_trace(c, path, codec=codec)
+
+
+def _mk_mux(store, topo):
+    return FleetMultiplexer(
+        FleetConfig(watermark_delay=1,
+                    fleet_detectors=["cross_job_failslow"], topology=topo),
+        history=store)
+
+
+def _ecfg():
+    return EngineConfig(backend="dense-train", num_ranks=N)
+
+
+def _oracle(logdir, store, topo, jobs):
+    """Serial replay + finalize: (sorted anomaly strings, stats)."""
+    mux = _mk_mux(store, topo)
+    for jid in jobs:
+        mux.add_job(jid, _ecfg())
+    stats = FleetReplayer(mux).replay_dir(logdir, job_workers=1)
+    out = sorted(mux.finalize(), key=lambda a: (a.ts, a.job_id, a.seq))
+    return [str(fa) for fa in out], stats
+
+
+def _sorted_strs(fas):
+    return [str(fa)
+            for fa in sorted(fas, key=lambda a: (a.ts, a.job_id, a.seq))]
+
+
+def _stream_all(client, chunk_lists, logdir):
+    """The equivalence-bench protocol: HELLO every job up front (the
+    frontier must know the join set), then stream each job's recorded
+    chunks, then BYE."""
+    for jid in sorted(chunk_lists):
+        client.hello(jid)
+    for jid in sorted(chunk_lists):
+        path = os.path.join(logdir, f"{jid}.fcs")
+        for batch, _sk in trace_store.iter_trace_chunks(path):
+            client.send_batch(jid, batch)
+    for jid in sorted(chunk_lists):
+        client.bye(jid)
+
+
+# ---------------------------------------------------------------------- #
+# wire protocol
+# ---------------------------------------------------------------------- #
+def test_protocol_roundtrip_and_clean_eof():
+    a, b = socket.socketpair()
+    try:
+        a.sendall(hello_frame("job-x", topology={"rack": "r1"}))
+        a.sendall(batch_frame("job-x", b"\x01payload"))
+        a.sendall(bye_frame("job-x"))
+        a.close()
+        ftype, jid, payload = read_frame(b)
+        assert (ftype, jid) == (1, "job-x")
+        assert parse_hello(payload)["topology"] == {"rack": "r1"}
+        ftype, jid, payload = read_frame(b)
+        assert (ftype, jid, payload) == (FRAME_BATCH, "job-x", b"\x01payload")
+        assert read_frame(b)[0] == 3
+        assert read_frame(b) is None        # clean EOF at boundary
+    finally:
+        b.close()
+
+
+def test_protocol_torn_and_corrupt_frames():
+    # torn: EOF mid-frame
+    a, b = socket.socketpair()
+    a.sendall(batch_frame("j", b"x" * 64)[:20])
+    a.close()
+    with pytest.raises(ProtocolError, match="torn"):
+        read_frame(b)
+    b.close()
+    # corrupt magic
+    a, b = socket.socketpair()
+    a.sendall(b"NOPE" + batch_frame("j", b"x")[4:])
+    a.close()
+    with pytest.raises(ProtocolError, match="magic"):
+        read_frame(b)
+    b.close()
+    # CRC mismatch
+    a, b = socket.socketpair()
+    frame = bytearray(batch_frame("j", b"hello"))
+    frame[-1] ^= 0xFF
+    a.sendall(bytes(frame))
+    a.close()
+    with pytest.raises(ProtocolError, match="CRC"):
+        read_frame(b)
+    b.close()
+    # unknown type
+    a, b = socket.socketpair()
+    a.sendall(encode_frame(9, "j", b""))
+    a.close()
+    with pytest.raises(ProtocolError, match="type"):
+        read_frame(b)
+    b.close()
+    with pytest.raises(ProtocolError):
+        parse_hello(b"not json")
+
+
+# ---------------------------------------------------------------------- #
+# socket ingest equivalence
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("worker_kind", ["inline", "process"])
+def test_socket_ingest_matches_replay(world, tmp_path, worker_kind):
+    prog, store = world
+    chunk_lists, topo = _mk_jobs(prog)
+    logdir = str(tmp_path)
+    _write_logs(logdir, chunk_lists)
+    oracle, ostats = _oracle(logdir, store, topo, chunk_lists)
+    assert oracle and any("(fleet)" in s for s in oracle)
+
+    got = []
+    svc = FleetService(
+        _mk_mux(store, topo),
+        ServiceConfig(port=0, worker_kind=worker_kind, workers=2,
+                      default_engine=_ecfg()),
+        on_anomaly=lambda fa, t: got.append(fa)).start()
+    try:
+        cl = LiveClient("127.0.0.1", svc.port)
+        _stream_all(cl, chunk_lists, logdir)
+        cl.close()
+        if worker_kind == "process":
+            deadline = time.time() + 30
+            while time.time() < deadline and not all(
+                    svc.mux.job(j).departed for j in chunk_lists):
+                time.sleep(0.02)
+    finally:
+        svc.finalize()
+    assert _sorted_strs(got) == oracle
+    assert svc.stats.events == ostats.events
+    assert dict(sorted(svc.stats.per_job.items())) == ostats.per_job
+    snap = svc.telemetry.snapshot()
+    counters = snap.get("counters", snap)
+    assert counters["serve.frames"] == sum(
+        len(c) for c in chunk_lists.values())
+    assert counters["serve.bytes_in"] > 0
+    assert counters.get("serve.dropped_frames", 0) == 0
+
+
+def test_socket_join_leave_mid_run_isolated(world, tmp_path):
+    """A job joins late, leaves early; frames after BYE are dropped and
+    counted; the OTHER jobs' diagnosis equals a fleet that never saw
+    the extra frames at all."""
+    prog, store = world
+    chunk_lists, topo = _mk_jobs(prog)
+    logdir = str(tmp_path)
+    _write_logs(logdir, chunk_lists)
+    leaver = sorted(chunk_lists)[0]
+
+    oracle, _ = _oracle(logdir, store, topo, chunk_lists)
+
+    got = []
+    svc = FleetService(
+        _mk_mux(store, topo),
+        ServiceConfig(port=0, default_engine=_ecfg()),
+        on_anomaly=lambda fa, t: got.append(fa)).start()
+    try:
+        cl = LiveClient("127.0.0.1", svc.port)
+        for jid in sorted(chunk_lists):
+            cl.hello(jid)
+        # leaver streams fully and BYEs while the others are mid-stream
+        paths = {jid: os.path.join(logdir, f"{jid}.fcs")
+                 for jid in chunk_lists}
+        chunks = {jid: [b for b, _ in
+                        trace_store.iter_trace_chunks(paths[jid])]
+                  for jid in chunk_lists}
+        for b in chunks[leaver]:
+            cl.send_batch(leaver, b)
+        cl.bye(leaver)
+        straggler = chunks[leaver][-1]
+        cl.send_batch(leaver, straggler)    # post-BYE: dropped, counted
+        for jid in sorted(chunk_lists):
+            if jid == leaver:
+                continue
+            for b in chunks[jid]:
+                cl.send_batch(jid, b)
+            cl.bye(jid)
+        cl.close()
+        deadline = time.time() + 10
+        while time.time() < deadline and not svc.mux.job(leaver).departed:
+            time.sleep(0.02)
+    finally:
+        svc.finalize()
+    # the straggler frame changed nothing: full equivalence holds
+    assert _sorted_strs(got) == oracle
+    snap = svc.telemetry.snapshot()
+    counters = snap.get("counters", snap)
+    assert counters[f"fleet.departed_rows{{job={leaver}}}"] == \
+        len(straggler)
+
+
+def test_torn_connection_counted_and_isolated(world, tmp_path):
+    """A connection dying mid-frame (and one sending a corrupt BATCH)
+    costs counted drops; a healthy job on another connection is
+    diagnosed exactly as if the bad connections never happened."""
+    prog, store = world
+    chunk_lists, topo = _mk_jobs(prog, jobs=2)
+    logdir = str(tmp_path)
+    _write_logs(logdir, chunk_lists)
+    oracle, _ = _oracle(logdir, store, topo, chunk_lists)
+
+    got = []
+    svc = FleetService(
+        _mk_mux(store, topo),
+        ServiceConfig(port=0, default_engine=_ecfg()),
+        on_anomaly=lambda fa, t: got.append(fa)).start()
+    try:
+        # torn: half a frame then EOF
+        s = socket.create_connection(("127.0.0.1", svc.port))
+        s.sendall(batch_frame("torn-job", b"x" * 256)[:30])
+        s.close()
+        # corrupt payload: valid frame, garbage FCS bytes
+        s2 = socket.create_connection(("127.0.0.1", svc.port))
+        s2.sendall(hello_frame("bad-job"))
+        s2.sendall(batch_frame("bad-job", b"this is not FCS"))
+        time.sleep(0.2)
+        s2.close()
+        cl = LiveClient("127.0.0.1", svc.port)
+        _stream_all(cl, chunk_lists, logdir)
+        cl.close()
+        deadline = time.time() + 10
+        while time.time() < deadline and not all(
+                svc.mux.job(j).departed for j in chunk_lists):
+            time.sleep(0.02)
+    finally:
+        svc.finalize()
+    assert _sorted_strs(got) == oracle
+    snap = svc.telemetry.snapshot()
+    counters = snap.get("counters", snap)
+    assert counters["serve.dropped_frames"] == 2
+
+
+# ---------------------------------------------------------------------- #
+# file-tail ingest
+# ---------------------------------------------------------------------- #
+def test_tail_ingest_matches_replay(world, tmp_path):
+    prog, store = world
+    chunk_lists, topo = _mk_jobs(prog)
+    logdir = str(tmp_path)
+    _write_logs(logdir, chunk_lists)
+    oracle, ostats = _oracle(logdir, store, topo, chunk_lists)
+
+    got = []
+    svc = FleetService(
+        _mk_mux(store, topo),
+        ServiceConfig(port=None, tail_dir=logdir, default_engine=_ecfg()),
+        on_anomaly=lambda fa, t: got.append(fa)).start()
+    deadline = time.time() + 10
+    while time.time() < deadline and svc.tailer.stats.events < ostats.events:
+        time.sleep(0.05)
+    svc.finalize()
+    assert _sorted_strs(got) == oracle
+    assert svc.tailer.stats.events == ostats.events
+    assert svc.tailer.stats.files == ostats.files
+    assert dict(sorted(svc.tailer.stats.per_job.items())) == ostats.per_job
+
+
+def test_tail_growing_file_segment_commit_points(world, tmp_path):
+    """A half-written segment is invisible; completing it delivers it.
+    The offset never rewinds, so bytes are decoded exactly once."""
+    prog, _ = world
+    batch = ClusterSimulator(N, prog, seed=5).run_batch(3)
+    full = os.path.join(str(tmp_path), "done.fcs")
+    trace_store.write_trace(batch, full, codec="fcs")
+    blob = open(full, "rb").read()
+
+    grow = os.path.join(str(tmp_path), "grow.fcs")
+    sunk = []
+    tailer = FileTailer(str(tmp_path), lambda j, b: sunk.append((j, b)))
+    with open(grow, "wb") as f:
+        f.write(blob[:len(blob) // 2])
+        f.flush()
+        tailer.poll_once()
+        assert [j for j, _ in sunk] == ["done"]     # partial: held back
+        f.write(blob[len(blob) // 2:])
+    tailer.poll_once()
+    assert sorted(j for j, _ in sunk) == ["done", "grow"]
+    assert sum(len(b) for j, b in sunk if j == "grow") == len(batch)
+    # idempotent: nothing new on a re-poll
+    n = len(sunk)
+    tailer.poll_once()
+    assert len(sunk) == n
+
+
+def test_tail_corruption_counted_like_replay(world, tmp_path):
+    """Truncated tail (killed writer) and structural garbage both land
+    as ``corrupt_files`` with intact leading segments still delivered —
+    the same accounting replay produces on the same files."""
+    prog, store = world
+    batch = ClusterSimulator(N, prog, seed=5).run_batch(3)
+    d = str(tmp_path)
+    ok = os.path.join(d, "ok.fcs")
+    trace_store.write_trace(batch, ok, codec="fcs")
+    blob = open(ok, "rb").read()
+    with open(os.path.join(d, "torn.fcs"), "wb") as f:
+        f.write(blob + blob[:len(blob) // 3])       # killed mid-segment
+    with open(os.path.join(d, "garbage.fcs"), "wb") as f:
+        f.write(b"\x00garbage not a segment" * 8)
+
+    sunk = []
+    tailer = FileTailer(d, lambda j, b: sunk.append((j, len(b))))
+    tailer.poll_once()
+    tailer.finish()
+    # replay oracle on the same directory
+    mux = FleetMultiplexer(FleetConfig(), history=store)
+    rstats = FleetReplayer(mux).replay_dir(d, job_workers=1)
+    assert tailer.stats.corrupt_files == rstats.corrupt_files == 2
+    assert tailer.stats.events == rstats.events
+    assert tailer.stats.files == rstats.files
+    # torn file's intact leading segment was still delivered
+    assert sum(n for j, n in sunk if j == "torn") == len(batch)
+
+    # tail_complete_segments itself raises on structural garbage
+    with pytest.raises(CodecError):
+        tail_complete_segments(os.path.join(d, "garbage.fcs"))
+
+
+def test_tail_jsonl_skips_corrupt_lines(world, tmp_path):
+    prog, _ = world
+    batch = ClusterSimulator(N, prog, seed=5).run_batch(2)
+    path = os.path.join(str(tmp_path), "j1.jsonl")
+    trace_store.write_trace(batch, path, codec="jsonl")
+    with open(path, "a") as f:
+        f.write("{not valid json\n")
+    sunk = []
+    tailer = FileTailer(str(tmp_path), lambda j, b: sunk.append(len(b)))
+    tailer.poll_once()
+    tailer.finish()
+    assert sum(sunk) == len(batch)
+    assert tailer.stats.skipped_lines == 1
+    assert tailer.stats.files == 1
+
+
+# ---------------------------------------------------------------------- #
+# graceful leave at the multiplexer level
+# ---------------------------------------------------------------------- #
+def test_retire_job_equivalent_to_terminal_finalize(world):
+    """Retiring each job at its end of stream, then finalizing, yields
+    the same merged output as one terminal finalize — and a retired
+    job's stragglers are dropped, counted, and change nothing."""
+    prog, store = world
+    chunk_lists, topo = _mk_jobs(prog)
+
+    def run(retire: bool):
+        mux = _mk_mux(store, topo)
+        for jid in chunk_lists:
+            mux.add_job(jid, _ecfg())
+        out = []
+        for jid in sorted(chunk_lists):
+            for c in chunk_lists[jid]:
+                mux.ingest(jid, c)
+            if retire:
+                mux.retire_job(jid)
+                out.extend(mux.poll())
+                mux.ingest(jid, chunk_lists[jid][-1])   # straggler
+        out.extend(mux.finalize())
+        return mux, _sorted_strs(out)
+
+    mux_a, plain = run(retire=False)
+    mux_b, retired = run(retire=True)
+    assert retired == plain and plain
+    jid0 = sorted(chunk_lists)[0]
+    snap = mux_b.telemetry.snapshot()
+    counters = snap.get("counters", snap)
+    assert counters[f"fleet.departed_rows{{job={jid0}}}"] == \
+        len(chunk_lists[jid0][-1])
+    assert mux_b.job(jid0).departed
+
+
+# ---------------------------------------------------------------------- #
+# daemon live sink
+# ---------------------------------------------------------------------- #
+def test_live_batch_sink_counted_drop_never_raises(world):
+    prog, _ = world
+    # a port with nothing listening
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    reg = TelemetryRegistry()
+    sink = LiveBatchSink(f"127.0.0.1:{port}", "j1", telemetry=reg,
+                         timeout=0.2, backoff_s=60.0)
+    batch = ClusterSimulator(N, prog, seed=5).run_batch(1)
+    assert sink(batch) is False
+    t0 = time.perf_counter()
+    assert sink(batch) is False             # inside backoff: instant drop
+    assert time.perf_counter() - t0 < 0.1
+    snap = reg.snapshot()
+    counters = snap.get("counters", snap)
+    assert counters["daemon.live_dropped"] == 2
+    sink.close()
+
+
+def test_daemon_live_endpoint_streams_to_service(world):
+    prog, store = world
+    svc = FleetService(
+        FleetMultiplexer(FleetConfig(), history=store),
+        ServiceConfig(port=0, default_engine=_ecfg())).start()
+    try:
+        d = TracingDaemon(DaemonConfig(
+            rank=0, drain_interval=0.01,
+            live_endpoint=f"127.0.0.1:{svc.port}", live_job_id="dj",
+            live_topology={"rack": "r9"}))
+        d.attach()
+        for s in range(3):
+            d.step_begin(s)
+            t0 = time.perf_counter()
+            d.record_span(EventKind.KERNEL_COMPUTE, "mm", t0, t0 + 1e-4)
+            d.step_end()
+        time.sleep(0.3)
+        d.detach()
+        deadline = time.time() + 5
+        while time.time() < deadline and \
+                svc.mux.job("dj").store.events_total == 0:
+            time.sleep(0.05)
+        assert svc.mux.job("dj").store.events_total > 0
+        assert svc.mux.topology["dj"] == {"rack": "r9"}
+        counters = d.telemetry.snapshot().get("counters", {})
+        assert counters["daemon.live_frames"] > 0
+        assert counters.get("daemon.live_dropped", 0) == 0
+    finally:
+        svc.finalize()
+
+
+# ---------------------------------------------------------------------- #
+# archive byte budgets + HTTP query plane
+# ---------------------------------------------------------------------- #
+def test_archive_byte_budgets(world, tmp_path):
+    from repro.archive import TraceArchive
+    prog, _ = world
+    d = str(tmp_path)
+    from repro.store import seg_path
+    for part in range(3):
+        batch = ClusterSimulator(N, prog, seed=20 + part).run_batch(3)
+        trace_store.write_trace(
+            batch, seg_path(os.path.join(d, "big.fcs3"), part),
+            codec="fcs3")
+    arch = TraceArchive(d)
+    full, scan_full = arch.query_events("big", with_scan=True)
+    assert not scan_full.truncated
+    cut, scan_cut = arch.query_events("big", with_scan=True, max_bytes=1)
+    assert scan_cut.truncated
+    assert 0 < len(cut) < len(full)
+    # deterministic prefix: same budget, same answer
+    cut2, _ = arch.query_events("big", with_scan=True, max_bytes=1)
+    assert len(cut2) == len(cut)
+
+    series = arch.query_metrics("big")
+    short, truncated = arch.query_metrics("big", max_bytes=1,
+                                          with_truncation=True)
+    assert truncated and 0 < len(short) <= len(series)
+    # deterministic: same budget, same prefix answer (cache-independent)
+    short2, t2 = arch.query_metrics("big", max_bytes=1,
+                                    with_truncation=True)
+    assert t2 and short2 == short
+    counters = arch.telemetry.snapshot().get("counters", {})
+    assert counters["archive.truncated_queries{kind=events}"] == 2
+    assert counters["archive.truncated_queries{kind=metrics}"] == 2
+
+
+def test_query_plane_endpoints(world, tmp_path):
+    prog, store = world
+    chunk_lists, topo = _mk_jobs(prog, jobs=2)
+    logdir = str(tmp_path)
+    _write_logs(logdir, chunk_lists)
+    svc = FleetService(
+        _mk_mux(store, topo),
+        ServiceConfig(port=0, query_port=0, tail_dir=logdir,
+                      archive_dir=logdir, archive_max_bytes=1 << 20,
+                      default_engine=_ecfg())).start()
+    try:
+        deadline = time.time() + 10
+        while time.time() < deadline and svc.tailer.stats.files < 2:
+            time.sleep(0.05)
+        svc.collect()
+        base = f"http://127.0.0.1:{svc.query_port}"
+
+        def get(p):
+            with urllib.request.urlopen(base + p, timeout=10) as r:
+                return json.load(r)
+
+        jobs = get("/jobs")["jobs"]
+        assert set(jobs) == set(chunk_lists)
+        assert all(j["open"] for j in jobs.values())
+        anoms = get("/anomalies?n=5")["anomalies"]
+        assert anoms and {"job", "kind", "team", "origin"} <= set(anoms[0])
+        weather = get("/weather")
+        assert weather["jobs_open"] == 2
+        assert weather["anomalies_recent"] > 0
+        tele = get("/telemetry")
+        assert "serve.tail_segments" in tele["telemetry"].get(
+            "counters", tele["telemetry"])
+        assert "per_job" in tele["queues"]
+        jid = sorted(chunk_lists)[0]
+        ev = get(f"/archive/events?job={jid}&step_lo=0&step_hi=3&limit=5")
+        assert ev["rows"] > 0 and len(ev["events"]) <= 5
+        assert not ev["truncated"]
+        ev_cut = get(f"/archive/events?job={jid}&max_bytes=1")
+        assert ev_cut["truncated"]
+        met = get(f"/archive/metrics?job={jid}&metric=throughput")
+        assert met["series"] and not met["truncated"]
+        with pytest.raises(urllib.error.HTTPError):
+            get("/nope")
+    finally:
+        svc.finalize()
