@@ -12,7 +12,18 @@ Measures, per (jobs x ranks x steps) scale and worker kind:
   * live-tail: the same fleet spilled to disk and followed by the
     ``FileTailer`` plane;
   * graceful leave: one job BYEs mid-run while the rest keep streaming,
-    then a straggler frame arrives post-BYE (dropped + counted).
+    then a straggler frame arrives post-BYE (dropped + counted);
+  * chaos (``--chaos-quick`` / full): the tail-plane fleet is KILLED at
+    a deterministic mid-stream point right after a checkpoint (half the
+    segments on disk), two corrupt checkpoint generations are planted
+    NEWER than the real one, and a fresh service must restore (skipping
+    both), replay only the spill suffix (proven by bytes-decoded
+    accounting: every byte decoded exactly once across incarnations,
+    suffix strictly less than full), and finish the run — the
+    pre-kill + post-restore anomaly stream, stats signature, and
+    fleet-tier reclassification set must be byte-equivalent to the
+    uninterrupted oracle, for BOTH worker kinds.  Recovery time
+    (checkpoint load + suffix replay) lands in ``BENCH_live.json``.
 
 Every arm is HARD-GATED on byte-equivalence with ``replay_dir`` over
 the same recorded files: anomaly stream (after the ``(ts, job_id,
@@ -281,14 +292,144 @@ def bench_tail(jobs: int, ranks: int, steps: int) -> dict:
     }
 
 
-def main(quick: bool = False):
+def bench_chaos(jobs: int, ranks: int, steps: int,
+                worker_kind: str) -> dict:
+    """Kill-and-restore equivalence gate: checkpoint mid-stream, kill
+    abruptly, plant torn/garbage checkpoints above the good one, restore
+    into a fresh service, finish the run — and require the stitched
+    anomaly stream to be indistinguishable from never having crashed."""
+    cfg = get_config("llama-20b-paper")
+    prog = program_from_config(cfg, num_chips=ranks)
+    store = _learned_store(prog, ranks)
+    chunk_lists, topo, total_events = _make_fleet(prog, jobs, ranks, steps)
+    label = f"{jobs}j_{ranks}r"
+
+    # deterministic kill point: only the first half of each job's
+    # segments exist when the checkpoint is cut, the rest land on disk
+    # while the first service is dead
+    first = {j: c[:len(c) // 2] for j, c in chunk_lists.items()}
+    rest = {j: c[len(c) // 2:] for j, c in chunk_lists.items()}
+    half_events = sum(len(c) for cs in first.values() for c in cs)
+
+    logdir = tempfile.mkdtemp(prefix="flare_live_chaos_")
+    ckptdir = os.path.join(logdir, "_ckpt")
+    scfg = ServiceConfig(port=None, tail_dir=logdir, tail_poll_s=0.005,
+                         drain_interval_s=0.01, worker_kind=worker_kind,
+                         default_engine=_ecfg(ranks),
+                         checkpoint_dir=ckptdir,
+                         checkpoint_on_finalize=False)
+    try:
+        _write_logs(logdir, first)
+        arrivals1: list = []
+        svc1 = FleetService(
+            _mk_mux(store, topo), scfg,
+            on_anomaly=lambda fa, t: arrivals1.append(fa)).start()
+        _wait(lambda: svc1.tailer.stats.events >= half_events)
+        meta = svc1.checkpoint()
+        svc1.kill()
+        emitted = meta["anomalies_emitted"]
+        pre = arrivals1[:emitted]
+        if len(pre) != emitted:
+            raise AssertionError(
+                f"chaos[{worker_kind}]: checkpoint claims {emitted} "
+                f"anomalies but only {len(pre)} were delivered")
+        if meta["tail_bytes_decoded"] <= 0:
+            raise AssertionError(
+                f"chaos[{worker_kind}]: checkpoint cut before any tail "
+                "progress — kill point is not mid-stream")
+
+        # the crashed service never saw these
+        _write_logs(logdir, rest)
+        oracle = _oracle(logdir, store, topo, chunk_lists, ranks)
+        full_bytes = sum(
+            os.path.getsize(os.path.join(logdir, f))
+            for f in os.listdir(logdir) if f.endswith(".fcs"))
+
+        # plant corruption ABOVE the good generation: restore must skip
+        # back past both, never misparse either
+        with open(meta["path"], "rb") as f:
+            good = f.read()
+        with open(os.path.join(ckptdir, "ckpt-99999990.flc"), "wb") as f:
+            f.write(b"\xde\xad\xbe\xef garbage, not a checkpoint " * 64)
+        with open(os.path.join(ckptdir, "ckpt-99999991.flc"), "wb") as f:
+            f.write(good[:max(len(good) // 2, 16)])     # torn mid-write
+
+        arrivals2: list = []
+        svc2 = FleetService(
+            _mk_mux(store, topo), scfg,
+            on_anomaly=lambda fa, t: arrivals2.append(fa))
+        t0 = time.monotonic()
+        meta2 = svc2.restore()
+        load_ms = (time.monotonic() - t0) * 1e3
+        if meta2 is None or meta2["generation"] != meta["generation"]:
+            raise AssertionError(
+                f"chaos[{worker_kind}]: restored "
+                f"{meta2 and meta2['generation']}, wanted generation "
+                f"{meta['generation']} (corrupt ones must be skipped)")
+        if len(meta2["skipped"]) < 2:
+            raise AssertionError(
+                f"chaos[{worker_kind}]: planted 2 corrupt checkpoints, "
+                f"skipped only {meta2['skipped']!r}")
+        svc2.start()
+        _wait(lambda: svc2.tailer.stats.events >= total_events)
+        recovery_ms = (time.monotonic() - t0) * 1e3
+        svc2.finalize()
+
+        # suffix-only replay, proven by byte accounting: every spill
+        # byte decoded exactly once across the two incarnations
+        suffix = full_bytes - meta["tail_bytes_decoded"]
+        if svc2.tailer.stats.bytes_decoded != full_bytes:
+            raise AssertionError(
+                f"chaos[{worker_kind}]: {svc2.tailer.stats.bytes_decoded}"
+                f" bytes decoded across incarnations, disk holds "
+                f"{full_bytes} — restore re-decoded or skipped data")
+        if not 0 < suffix < full_bytes:
+            raise AssertionError(
+                f"chaos[{worker_kind}]: suffix {suffix}B of {full_bytes}B"
+                " — replay after restore was not strictly partial")
+
+        merged = sorted(pre + arrivals2,
+                        key=lambda a: (a.ts, a.job_id, a.seq))
+        sig = (svc2.tailer.stats.events,
+               dict(sorted(svc2.tailer.stats.per_job.items())))
+        reclass = sum(1 for fa in merged if fa.origin == "fleet")
+        _assert_equivalent(f"chaos[{worker_kind}]",
+                           ([str(fa) for fa in merged], sig, reclass),
+                           oracle)
+    finally:
+        shutil.rmtree(logdir, ignore_errors=True)
+
+    emit(f"live/chaos_{worker_kind}_{label}", recovery_ms * 1e3,
+         f"recovery_ms={recovery_ms:.1f};load_ms={load_ms:.1f};"
+         f"suffix_bytes={suffix};full_bytes={full_bytes};"
+         f"skipped_ckpts={len(meta2['skipped'])};"
+         f"anomalies={len(merged)};reclassified={reclass};"
+         f"equivalent=TRUE")
+    return {
+        "jobs": jobs, "ranks": ranks, "steps": steps,
+        "events": total_events, "worker_kind": worker_kind,
+        "recovery_ms": recovery_ms, "checkpoint_load_ms": load_ms,
+        "suffix_bytes": suffix, "full_bytes": full_bytes,
+        "checkpoint_bytes": meta["bytes"],
+        "corrupt_checkpoints_skipped": len(meta2["skipped"]),
+        "anomalies": len(merged), "fleet_reclassified": reclass,
+        "diagnosis_byte_equivalent": True,
+    }
+
+
+def main(quick: bool = False, chaos_only: bool = False):
     results = {}
     jobs, ranks, steps = (4, 16, 6) if quick else (8, 64, 8)
     scale = f"{jobs}x{ranks}x{steps}"
-    for kind in ("inline", "process"):
-        results[f"socket_{kind}_{scale}"] = bench_socket(
-            jobs, ranks, steps, worker_kind=kind)
-    results[f"tail_{scale}"] = bench_tail(jobs, ranks, steps)
+    if not chaos_only:
+        for kind in ("inline", "process"):
+            results[f"socket_{kind}_{scale}"] = bench_socket(
+                jobs, ranks, steps, worker_kind=kind)
+        results[f"tail_{scale}"] = bench_tail(jobs, ranks, steps)
+    if chaos_only or not quick:     # CI runs the chaos gate as its own arm
+        for kind in ("inline", "process"):
+            results[f"chaos_{kind}_{scale}"] = bench_chaos(
+                jobs, ranks, steps, worker_kind=kind)
     merge_bench_json(OUT_JSON, results)
     emit("live/json", 0.0, f"merged={OUT_JSON}")
     return results
@@ -298,6 +439,9 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="small scale for CI smoke runs")
+    ap.add_argument("--chaos-quick", action="store_true",
+                    help="small scale, kill-and-restore gate only")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    main(quick=args.quick)
+    main(quick=args.quick or args.chaos_quick,
+         chaos_only=args.chaos_quick)

@@ -312,14 +312,19 @@ class TraceArchive:
 
     def _store_disk_rollup(self, path: str, fp: tuple,
                            rollup: dict[int, dict]) -> None:
-        """Best-effort atomic sidecar write (tmp + rename); a read-only
-        archive directory just stays cold."""
+        """Best-effort atomic sidecar write (tmp + fsync + rename); a
+        read-only archive directory just stays cold."""
         sidecar = self._rollup_sidecar(path)
         tmp = sidecar + ".tmp"
         try:
             with open(tmp, "w") as f:
                 json.dump({"fingerprint": list(fp), "rollup": rollup}, f,
                           separators=(",", ":"))
+                # fsync BEFORE the rename: otherwise a crash can leave
+                # the sidecar name pointing at not-yet-flushed bytes —
+                # a torn rollup that parses as garbage on the next boot
+                f.flush()
+                os.fsync(f.fileno())
             os.replace(tmp, sidecar)
         except OSError:
             try:

@@ -71,6 +71,17 @@ class Detector:
     def bind(self, ctx: DetectorContext) -> None:
         self.ctx = ctx
 
+    def state_dict(self) -> dict:
+        """Picklable instance state for service checkpoints: everything
+        on the instance except the bound context (which the restoring
+        engine re-binds).  Detectors holding unpicklable state must
+        override this pair."""
+        return {k: v for k, v in self.__dict__.items() if k != "ctx"}
+
+    def load_state(self, state: dict) -> None:
+        """Inverse of :meth:`state_dict`; call after :meth:`bind`."""
+        self.__dict__.update(state)
+
     def observe_step(self, m, step: int) -> list[Anomaly]:
         return []
 

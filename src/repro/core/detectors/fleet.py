@@ -43,6 +43,15 @@ class FleetDetector:
     def bind(self, ctx: FleetContext) -> None:
         self.ctx = ctx
 
+    def state_dict(self) -> dict:
+        """Picklable instance state for service checkpoints (the bound
+        context is excluded; the restoring multiplexer re-binds)."""
+        return {k: v for k, v in self.__dict__.items() if k != "ctx"}
+
+    def load_state(self, state: dict) -> None:
+        """Inverse of :meth:`state_dict`; call after :meth:`bind`."""
+        self.__dict__.update(state)
+
     def observe_step(self, job_id: str, step: int,
                      anomalies: list[Anomaly],
                      ts: float) -> list[tuple[str, Anomaly]]:

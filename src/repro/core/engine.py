@@ -221,6 +221,41 @@ class DiagnosticEngine:
         NOT transfer; only the evaluated-step set does."""
         self._evaluated.update(int(s) for s in steps)
 
+    # ------------------------------------------------------------------ #
+    # service checkpoints: full incremental-path state transfer
+    # ------------------------------------------------------------------ #
+    def snapshot_state(self) -> dict:
+        """Picklable state of the INCREMENTAL evaluation path, complete
+        enough that a fresh engine restored from it continues the stream
+        byte-equivalently: evaluated-step set, finalize flag, the
+        first-step baseline, and every detector's instance state (in
+        configured order).  The ``metrics``/``anomalies`` histories are
+        deliberately NOT included — they are debug/query conveniences
+        reconstructed from the archive, not inputs to diagnosis."""
+        return {
+            "evaluated": sorted(self._evaluated),
+            "finalized": self._finalized,
+            "baseline": self.ctx.baseline,
+            "detectors": [(type(d).name, d.state_dict())
+                          for d in self.detectors],
+        }
+
+    def restore_state(self, state: dict) -> None:
+        """Inverse of :meth:`snapshot_state` on a freshly constructed
+        engine with the SAME config (the detector set must match — the
+        checkpoint records instance state, not instances)."""
+        have = [type(d).name for d in self.detectors]
+        want = [nm for nm, _ in state["detectors"]]
+        if have != want:
+            raise ValueError(
+                f"detector set mismatch restoring engine state: "
+                f"checkpoint has {want}, engine has {have}")
+        self._evaluated = {int(s) for s in state["evaluated"]}
+        self._finalized = bool(state["finalized"])
+        self.ctx.baseline = state["baseline"]
+        for d, (_nm, ds) in zip(self.detectors, state["detectors"]):
+            d.load_state(ds)
+
     def evaluate_new_steps(self, upto: Optional[int] = None) -> list[Anomaly]:
         """Incremental evaluation over the engine's OWN store: evaluate, in
         ascending order, every step not yet evaluated — optionally only

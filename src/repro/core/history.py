@@ -105,6 +105,18 @@ class HistoryStore:
             with open(os.path.join(self.dir, fname), "w") as f:
                 json.dump(asdict(profile), f)
 
+    def snapshot_profiles(self) -> dict:
+        """Picklable view of every learned healthy profile (service
+        checkpoints capture it so a restarted daemon judges regressions
+        against the same references even with an empty profile dir)."""
+        return dict(self._mem)
+
+    def restore_profiles(self, profiles: dict) -> None:
+        """Fold checkpointed profiles back in.  Profiles already present
+        win — they are the same or newer than the checkpointed ones."""
+        for key, prof in profiles.items():
+            self._mem.setdefault(key, prof)
+
     def _load_all(self):
         for name in os.listdir(self.dir):
             if not name.endswith(".json"):

@@ -125,6 +125,20 @@ class TelemetryRegistry:
                 g = self._gauges[key] = Gauge(name, tags)
             return g
 
+    def value(self, name: str, **tags) -> float:
+        """Current value of a series, 0.0 if it was never touched —
+        counter first, gauge as fallback.  Read-only: unlike
+        :meth:`counter`/:meth:`gauge` it never materializes the series,
+        so probing (tests, the chaos harness asserting on recovery
+        counters) leaves snapshots unchanged."""
+        key = series_key(name, tags)
+        with self._lock:
+            c = self._counters.get(key)
+            if c is not None:
+                return c.value
+            g = self._gauges.get(key)
+            return g.value if g is not None else 0.0
+
     # ------------------------------------------------------------------ #
     def snapshot(self, extra_tags: Optional[dict] = None) -> dict:
         """Plain-JSON snapshot of every series.  ``extra_tags`` are

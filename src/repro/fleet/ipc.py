@@ -60,15 +60,20 @@ from typing import Callable, Optional
 #   ("batches", job_id, [fcs_bytes], engine_cfg, record_fleet)
 #   ("open", job_id, None, engine_cfg, record_fleet)   explicit join
 #   ("close", job_id, None, None, None)                graceful leave
+#   ("snapshot", job_id, None, None, None)   ship pending + full job state
+#   ("restore", job_id, state, engine_cfg, record_fleet)  rebuild from it
 #   None (shutdown sentinel: close every open job, then exit)
 TASK_REPLAY = "replay"
 TASK_BATCHES = "batches"
 TASK_OPEN = "open"
 TASK_CLOSE = "close"
+TASK_SNAPSHOT = "snapshot"
+TASK_RESTORE = "restore"
 
 # result envelopes, on the owning worker's bounded queue:
 #   ("anomalies", job_id, [(ts, Anomaly), ...])     incremental
 #   ("fleet", job_id, [(key, step, anoms, ts)], progress)  incremental
+#   ("snapshot", job_id, state_dict_or_None)        checkpoint answer
 #   ("job", job_id, payload_dict)                   terminal, per job
 #   ("error", job_id, traceback_str)
 #   ("exit",)                                       worker is done
@@ -142,6 +147,39 @@ def _close_job(result_q, job_id: str, wj: _WorkerJob) -> None:
     }))
 
 
+def _snapshot_job(result_q, job_id: str, wj: Optional[_WorkerJob]) -> None:
+    """Checkpoint answer for one resident job: flush pending outputs
+    first (``_ship`` — so the parent buffers every observation BEFORE
+    the snapshot envelope lands; the result queue is FIFO), then ship
+    the job's complete pipeline state.  The worker's intern tables ride
+    along — restored slices reference them, and pickling state + tables
+    as one envelope keeps that identity across the IPC boundary."""
+    if wj is None:
+        result_q.put(("snapshot", job_id, None))
+        return
+    _ship(result_q, job_id, wj)
+    result_q.put(("snapshot", job_id, {
+        "pipeline": wj.mux.snapshot_job_state(job_id),
+        "names": wj.mux.interner.names,
+        "groups": wj.mux.interner.groups,
+        "stats": wj.stats,
+        "telemetry": wj.mux.telemetry.snapshot(),
+    }))
+
+
+def _restore_job(job_id: str, state: dict, engine_cfg, record_fleet: bool,
+                 init: dict) -> _WorkerJob:
+    """Rebuild a resident job from its :func:`_snapshot_job` state: a
+    fresh pipeline, then tables + full pipeline state + job-local stats
+    + telemetry loaded back in."""
+    wj = _WorkerJob(job_id, engine_cfg, bool(record_fleet), init)
+    wj.mux.interner.restore_tables(state["names"], state["groups"])
+    wj.mux.restore_job_pipeline(job_id, state["pipeline"])
+    wj.stats = state["stats"]
+    wj.mux.telemetry.absorb(state["telemetry"])
+    return wj
+
+
 def _worker_main(task_q, result_q, init: dict) -> None:
     """Resident worker loop: pull tasks until the shutdown sentinel,
     holding every open job's pipeline between tasks.  An exception in
@@ -163,6 +201,13 @@ def _worker_main(task_q, result_q, init: dict) -> None:
                 if wj is None:
                     wj = _WorkerJob(job_id, engine_cfg, False, init)
                 _close_job(result_q, job_id, wj)
+                continue
+            if kind == TASK_SNAPSHOT:
+                _snapshot_job(result_q, job_id, jobs.get(job_id))
+                continue
+            if kind == TASK_RESTORE:
+                jobs[job_id] = _restore_job(job_id, payload, engine_cfg,
+                                            bool(record_fleet), init)
                 continue
             if kind not in (TASK_OPEN, TASK_REPLAY, TASK_BATCHES):
                 raise ValueError(f"unknown worker task kind {kind!r}")
@@ -235,6 +280,7 @@ class ProcessWorkerPool:
         self._next_worker = 0
         self._drainers: list[threading.Thread] = []
         self._shutdown_sent = False
+        self._closing = False        # intentional teardown: deaths expected
         self._obs_lock = threading.Lock()
         # job -> [(key, step, anoms, ts)] in ship order, accumulated by
         # the drainers when no on_fleet callback consumes them instead
@@ -244,6 +290,8 @@ class ProcessWorkerPool:
         self._on_fleet: Optional[Callable] = None
         self._on_job: Optional[Callable] = None
         self._on_error: Optional[Callable] = None
+        self._on_snapshot: Optional[Callable] = None
+        self._on_death: Optional[Callable] = None
         for i in range(workers):
             tq = ctx.Queue()
             rq = ctx.Queue(maxsize=max(result_depth, 2))
@@ -297,7 +345,9 @@ class ProcessWorkerPool:
     def start(self, *, on_anomalies: Optional[Callable] = None,
               on_fleet: Optional[Callable] = None,
               on_job: Optional[Callable] = None,
-              on_error: Optional[Callable] = None) -> None:
+              on_error: Optional[Callable] = None,
+              on_snapshot: Optional[Callable] = None,
+              on_death: Optional[Callable] = None) -> None:
         """Start one drainer thread per worker (idempotent).  Callbacks
         may fire from several drainer threads at once — one per worker —
         so they must only touch internally-locked state:
@@ -307,18 +357,27 @@ class ProcessWorkerPool:
         * ``on_fleet(job_id, obs, progress)`` — keyed fleet observations
           plus frontier progress (when absent, both accumulate on
           ``fleet_observations`` / ``fleet_progress`` instead);
+        * ``on_snapshot(job_id, state_or_None)`` — ``TASK_SNAPSHOT``
+          answer (the job's full pipeline state for a checkpoint);
         * ``on_job(job_id, payload)`` — terminal envelope (always also
           recorded in ``results``);
         * ``on_error(job_id, tb)`` — when absent, errors collect and
-          ``join`` raises."""
+          ``join`` raises;
+        * ``on_death(worker_index)`` — a worker died WITHOUT its exit
+          envelope and the pool is not closing: the recovery hook (when
+          absent, an error records instead).  Fires from that worker's
+          drainer thread, which returns right after — recovery must run
+          elsewhere (never join drainers from it)."""
         if self._drainers:
             return
         self._on_anomalies = on_anomalies
         self._on_fleet = on_fleet
         self._on_job = on_job
         self._on_error = on_error
+        self._on_snapshot = on_snapshot
+        self._on_death = on_death
         self._drainers = [threading.Thread(
-            target=self._drain_one, args=(p, rq),
+            target=self._drain_one, args=(i, p, rq),
             daemon=True, name=f"flare-fleet-drain-{i}")
             for i, (p, rq) in enumerate(zip(self._procs, self._result_qs))]
         for t in self._drainers:
@@ -330,6 +389,7 @@ class ProcessWorkerPool:
         drainers) and exits."""
         if not self._shutdown_sent:
             self._shutdown_sent = True
+            self._closing = True
             for q in self._task_qs:
                 q.put(None)
 
@@ -359,7 +419,7 @@ class ProcessWorkerPool:
         self.shutdown()
         return self.join()
 
-    def _drain_one(self, proc, rq) -> None:
+    def _drain_one(self, index: int, proc, rq) -> None:
         dead_polls = 0
         while True:
             try:
@@ -370,6 +430,11 @@ class ProcessWorkerPool:
                     # written just before an abnormal death
                     dead_polls += 1
                     if dead_polls >= 3:
+                        if self._closing:
+                            return     # intentional teardown, not a death
+                        if self._on_death is not None:
+                            self._on_death(index)
+                            return
                         self._record_error(
                             "<unknown>",
                             f"worker {proc.name} died without an exit "
@@ -383,6 +448,9 @@ class ProcessWorkerPool:
             if kind == "anomalies":
                 if self._on_anomalies is not None:
                     self._on_anomalies(env[1], env[2])
+            elif kind == "snapshot":
+                if self._on_snapshot is not None:
+                    self._on_snapshot(env[1], env[2])
             elif kind == "fleet":
                 if self._on_fleet is not None:
                     self._on_fleet(env[1], env[2], env[3])
@@ -405,7 +473,36 @@ class ProcessWorkerPool:
         else:
             self._errors.append((job_id, tb))
 
+    def kill_worker(self, index: int) -> None:
+        """Chaos hook: SIGKILL one worker process mid-flight (its open
+        jobs' in-memory state is lost — exactly the failure the service's
+        checkpoint recovery exists for)."""
+        self._procs[index].kill()
+
+    def stop(self, *, drainer_timeout: float = 10.0) -> None:
+        """Abrupt teardown for recovery paths: mark the pool closing
+        (so the terminations below don't read as worker deaths), kill
+        the processes, and JOIN the drainer threads — after this no
+        callback fires again, so the caller can safely rebuild shared
+        state the callbacks touch.  Must not be called from a drainer
+        thread (a drainer cannot join itself)."""
+        self._closing = True
+        for p in self._procs:
+            if p.is_alive():
+                p.terminate()
+        for p in self._procs:
+            p.join(timeout=5.0)
+        # drainers exit via their dead-process grace polls (suppressed
+        # by _closing); only then is it safe to close the queues under
+        # them
+        for t in self._drainers:
+            t.join(timeout=drainer_timeout)
+        for q in (*self._result_qs, *self._task_qs):
+            q.close()
+            q.cancel_join_thread()
+
     def close(self) -> None:
+        self._closing = True
         for p in self._procs:
             if p.is_alive():
                 p.terminate()

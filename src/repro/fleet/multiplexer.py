@@ -478,6 +478,96 @@ class FleetMultiplexer:
                 max(job.store.max_step_seen - job.last_closed, 0))
             job.pending_depth.set(len(job.store.pending_steps()))
 
+    # ------------------------------------------------------------------ #
+    # service checkpoints: full pipeline state transfer
+    # ------------------------------------------------------------------ #
+    def snapshot_job_state(self, job_id: str) -> dict:
+        """Complete picklable state of ONE job's pipeline — store
+        (pending slices included), engine (evaluated set, baseline,
+        detector instances), watermark position, flags, counters, and
+        the job's fleet-frontier progress.  Unlike the worker terminal
+        ``summary()`` (lossy by design), a pipeline restored from this
+        continues the stream byte-equivalently."""
+        job = self.job(job_id)
+        with job.lock:
+            state = {
+                "store": job.store.snapshot_state(),
+                "engine": job.engine.snapshot_state(),
+                "last_closed": job.last_closed,
+                "hang_reported": job.hang_reported,
+                "departed": job.departed,
+                "anomaly_count": job.anomaly_count,
+            }
+        with self._fleet_det_lock:
+            state["fleet_progress"] = self._fleet_progress.get(
+                job_id, float("-inf"))
+        return state
+
+    def restore_job_pipeline(self, job_id: str, state: dict) -> None:
+        """Inverse of :meth:`snapshot_job_state` onto an ``add_job``-ed
+        job with the same engine config, on an interner that already
+        adopted the checkpointed tables."""
+        job = self.job(job_id)
+        with job.lock:
+            job.store.restore_state(state["store"])
+            job.engine.restore_state(state["engine"])
+            job.last_closed = int(state["last_closed"])
+            job.hang_reported = bool(state["hang_reported"])
+            job.departed = bool(state["departed"])
+            with job.counter_lock:
+                job.anomaly_count = int(state["anomaly_count"])
+            job.watermark_lag.set(
+                max(job.store.max_step_seen - job.last_closed, 0))
+            job.pending_depth.set(len(job.store.pending_steps()))
+        with self._fleet_det_lock:
+            self._fleet_progress[job_id] = float(state["fleet_progress"])
+
+    def snapshot_fleet_state(self) -> dict:
+        """Fleet-tier (cross-job) picklable state: the shared intern
+        tables (the live list objects — pickled in the same dump as the
+        job states so slice identity survives), topology, the buffered
+        observation sequences + frontier progress, every fleet
+        detector's instance state, and the stream's sequence counter.
+        Take it quiesced (no concurrent ingest) with the stream drained."""
+        with self._fleet_det_lock:
+            return {
+                "names": self.interner.names,
+                "groups": self.interner.groups,
+                "topology": {k: dict(v) for k, v in self.topology.items()},
+                "fleet_buf": {j: list(b)
+                              for j, b in self._fleet_buf.items()},
+                "fleet_progress": dict(self._fleet_progress),
+                "fleet_detectors": [(type(fd).name, fd.state_dict())
+                                    for fd in self.fleet_detectors],
+                "stream_total": self.stream.total,
+                "history_profiles": self.history.snapshot_profiles(),
+            }
+
+    def restore_fleet_state(self, state: dict) -> None:
+        """Inverse of :meth:`snapshot_fleet_state` on a fresh
+        multiplexer with the same fleet-detector config.  Call BEFORE
+        restoring any job pipeline (they expect the adopted tables).
+        Topology merges (``self.topology`` is the live object the bound
+        ``FleetContext`` reads, so it mutates in place)."""
+        have = [type(fd).name for fd in self.fleet_detectors]
+        want = [nm for nm, _ in state["fleet_detectors"]]
+        if have != want:
+            raise ValueError(
+                f"fleet-detector set mismatch restoring state: "
+                f"checkpoint has {want}, multiplexer has {have}")
+        self.interner.restore_tables(state["names"], state["groups"])
+        with self._fleet_det_lock:
+            for job_id, attrs in state["topology"].items():
+                self.topology.setdefault(job_id, {}).update(attrs)
+            self._fleet_buf = {j: list(b)
+                               for j, b in state["fleet_buf"].items()}
+            self._fleet_progress = dict(state["fleet_progress"])
+            for fd, (_nm, fs) in zip(self.fleet_detectors,
+                                     state["fleet_detectors"]):
+                fd.load_state(fs)
+        self.stream.restore_seq(state["stream_total"])
+        self.history.restore_profiles(state["history_profiles"])
+
     def _maybe_hang(self, job: FleetJob) -> None:
         stacks = job.store.hang_stacks
         if job.hang_reported or not stacks:

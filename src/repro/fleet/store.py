@@ -58,6 +58,21 @@ class SharedInterner:
             self.groups.append(group)
         return i
 
+    def restore_tables(self, names: list, groups: list) -> None:
+        """Adopt checkpointed tables — the VERY list objects, not copies.
+        Restored ``EventBatch`` slices from the same checkpoint pickle
+        reference these exact objects (single-pickle identity memo), so
+        adopting them keeps the ``batch.names is self.names`` fast path
+        valid after restore.  Only legal on an empty interner: merging
+        into live tables would break that identity."""
+        with self._lock:
+            if self.names or self.groups:
+                raise ValueError("restore_tables on a non-empty interner")
+            self.names = names
+            self.groups = groups
+            self._name_ids = {nm: i for i, nm in enumerate(names)}
+            self._group_ids = {gm: i for i, gm in enumerate(groups)}
+
     def merge_tables(self, names, groups) -> None:
         """Fold another interner's tables in (a replay worker process
         built its own; the parent adopts every name/group it saw).  Ids
@@ -222,3 +237,43 @@ class StepPartitionedStore:
         self.max_step_seen = max(self.max_step_seen, int(s["max_step_seen"]))
         self.last_ts = max(self.last_ts, float(s["last_ts"]))
         self.hang_stacks.update(s["hang_stacks"])
+
+    # ------------------------------------------------------------------ #
+    # service checkpoints: FULL state transfer (summary() is lossy — it
+    # drops pending slices and rank identities, which a mid-stream
+    # restore needs intact)
+    # ------------------------------------------------------------------ #
+    def snapshot_state(self) -> dict:
+        """Complete picklable state, pending ``EventBatch`` slices
+        included.  Slices reference the interner's live list objects;
+        pickled together with the interner tables (one checkpoint
+        pickle) the shared identity survives the round trip."""
+        return {
+            "by_step": {s: list(v) for s, v in self._by_step.items()},
+            "step_rows": dict(self._step_rows),
+            "buffered_rows": self.buffered_rows,
+            "rank_seen": self._rank_seen.copy(),
+            "ranks_floor": self._ranks_floor,
+            "max_step_seen": self.max_step_seen,
+            "last_ts": self.last_ts,
+            "events_total": self.events_total,
+            "nostep_events": self.nostep_events,
+            "hang_stacks": dict(self.hang_stacks),
+        }
+
+    def restore_state(self, s: dict) -> None:
+        """Inverse of :meth:`snapshot_state` on a fresh store whose
+        interner already adopted the checkpointed tables."""
+        self._by_step = {int(k): list(v) for k, v in s["by_step"].items()}
+        self._step_rows = {int(k): int(v)
+                           for k, v in s["step_rows"].items()}
+        self.buffered_rows = int(s["buffered_rows"])
+        self._rank_seen = s["rank_seen"]
+        self._ranks_floor = int(s["ranks_floor"])
+        self._num_ranks = 0
+        self._ranks_dirty = True
+        self.max_step_seen = int(s["max_step_seen"])
+        self.last_ts = float(s["last_ts"])
+        self.events_total = int(s["events_total"])
+        self.nostep_events = int(s["nostep_events"])
+        self.hang_stacks = dict(s["hang_stacks"])

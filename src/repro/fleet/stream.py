@@ -80,6 +80,14 @@ class AnomalyStream:
         out.sort(key=lambda a: (a.ts, a.job_id, a.seq))
         return out
 
+    def restore_seq(self, total: int) -> None:
+        """Continue a checkpointed stream's fleet-wide sequence: the
+        next push gets ``seq >= total``, so post-restore anomalies never
+        reuse the sequence numbers of ones emitted before the snapshot
+        (the ring and downstream consumers stay monotone)."""
+        with self._lock:
+            self.total = max(self.total, int(total))
+
     def drain_raw(self) -> list[FleetAnomaly]:
         """Pending anomalies in ARRIVAL order, no merge sort.  A replay
         worker process ships these across the IPC boundary; the parent

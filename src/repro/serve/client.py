@@ -126,6 +126,10 @@ class LiveBatchSink:
             sock = socket.create_connection((self.host, self.port),
                                             timeout=self.timeout)
             sock.settimeout(self.timeout)
+            # HELLO rides EVERY fresh connection, not just the first:
+            # a service restarted from a checkpoint (or rebooted cold)
+            # learns this job's topology + engine overrides again on the
+            # next backoff reconnect, with no daemon-side special case
             sock.sendall(hello_frame(self.job_id, self.topology,
                                      self.engine))
         except OSError:

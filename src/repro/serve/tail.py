@@ -140,6 +140,8 @@ class FileTailer:
             if tf.kind == "fcs":
                 return self._pump_fcs(job_id, tf)
             return self._pump_jsonl(job_id, tf)
+        except FileNotFoundError:
+            return 0       # vanished (restored state, file pruned): wait
         except CodecError:
             # structural corruption at a COMPLETED offset: count the
             # file once, stop consuming it (replay's skip-and-count)
@@ -152,6 +154,10 @@ class FileTailer:
 
     def _pump_fcs(self, job_id: str, tf: _TailFile) -> int:
         batches, new_off = tail_complete_segments(tf.path, tf.offset)
+        # every byte of every completed segment is decoded exactly once
+        # across tailer incarnations (offsets are checkpointed), so this
+        # is the suffix-only-replay accounting the chaos gate asserts on
+        self.stats.bytes_decoded += new_off - tf.offset
         tf.offset = new_off
         for b in batches:
             n = len(b)
@@ -181,6 +187,7 @@ class FileTailer:
             chunk = data[:cut + 1]
         batch, skipped = decode_jsonl_lines(chunk.splitlines())
         tf.offset += len(chunk)
+        self.stats.bytes_decoded += len(chunk)
         if skipped:
             self.stats.skipped_lines += skipped
             self._count("serve.tail_skipped_lines", skipped)
@@ -252,6 +259,50 @@ class FileTailer:
                 self._pump(job_id, tf)
                 self._finish_file(job_id, tf)
                 tj.idx += 1
+
+    # ------------------------------------------------------------------ #
+    # service checkpoints: byte/segment offsets + accounting
+    # ------------------------------------------------------------------ #
+    def state_dict(self) -> dict:
+        """Picklable tail position: per-file consumed offsets (FCS
+        offsets always sit on segment boundaries — the commit points —
+        so a restored tailer resumes mid-file without re-decoding),
+        per-job rotation cursors, and the replay-comparable stats."""
+        return {
+            "jobs": {
+                job_id: {
+                    "idx": tj.idx,
+                    "files": [{
+                        "path": tf.path, "kind": tf.kind,
+                        "offset": tf.offset, "events": tf.events,
+                        "dead": tf.dead,
+                        "corrupt_counted": tf.corrupt_counted,
+                    } for tf in tj.files],
+                } for job_id, tj in self._jobs.items()
+            },
+            "stats": self.stats,
+            "finished": self._finished,
+        }
+
+    def load_state(self, state: dict) -> None:
+        """Inverse of :meth:`state_dict` on a fresh tailer over the same
+        directory: tailing resumes exactly at the recorded offsets (only
+        the suffix past them is ever decoded again), and the restored
+        stats continue the uninterrupted run's accounting."""
+        self._jobs = {}
+        for job_id, js in state["jobs"].items():
+            tj = self._jobs[job_id] = _TailJob()
+            tj.idx = int(js["idx"])
+            for fs in js["files"]:
+                tf = _TailFile(fs["path"], fs["kind"])
+                tf.offset = int(fs["offset"])
+                tf.events = int(fs["events"])
+                tf.dead = bool(fs["dead"])
+                tf.corrupt_counted = bool(fs["corrupt_counted"])
+                tj.known.add(tf.path)
+                tj.files.append(tf)
+        self.stats = state["stats"]
+        self._finished = bool(state["finished"])
 
     def run(self, stop: threading.Event, poll_s: float = 0.05) -> None:
         """Thread body: poll until ``stop`` is set, then ``finish()``."""

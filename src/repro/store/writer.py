@@ -30,11 +30,13 @@ ROLLUP_SUFFIX = ".rollup.json"
 
 
 def is_sidecar_path(path: str) -> bool:
-    """True for archive sidecar files (rollup caches, telemetry exports)
-    that must not be treated as trace logs even when a codec's extension
-    glob matches them."""
+    """True for archive sidecar files (rollup caches, telemetry exports,
+    service checkpoints) that must not be treated as trace logs even
+    when a codec's extension glob matches them."""
     base = os.path.basename(path)
-    return base.endswith(ROLLUP_SUFFIX) or bool(_TELEMETRY_RE.match(base))
+    return (base.endswith(ROLLUP_SUFFIX)
+            or base.endswith(".flc") or base.endswith(".flc.tmp")
+            or bool(_TELEMETRY_RE.match(base)))
 
 
 def seg_path(base_path: str, index: int) -> str:

@@ -1,0 +1,320 @@
+"""Checkpoint/restore tests (ISSUE 10).
+
+Covered:
+  * FLCK container: roundtrip, atomic write (no torn final name),
+    generation numbering + pruning;
+  * torn-state handling: truncated header/payload, bit-flipped CRC, bad
+    magic, implausible length — all detected, skipped back past to the
+    previous valid generation, never misparsed;
+  * newer-format-version refusal: :class:`CheckpointVersionError`, loud,
+    never skipped;
+  * no-checkpoint fallback: ``restore()`` returns ``None`` and the
+    service runs a full replay with unchanged results;
+  * worker-kind mismatch refusal;
+  * service-level kill-and-restore: an inline tail service checkpointed
+    mid-stream (pending step buffers live, watermark open), killed, and
+    restored into a fresh process resumes at the recorded tail offsets,
+    replays only the suffix, and stitches an anomaly stream
+    byte-equivalent to an uninterrupted run.
+"""
+import os
+import struct
+import time
+import zlib
+
+import pytest
+
+from repro import store as trace_store
+from repro.configs import get_config
+from repro.core.engine import DiagnosticEngine, EngineConfig
+from repro.core.history import HistoryStore
+from repro.core.timeline import (ClusterSimulator, Injection,
+                                 program_from_config)
+from repro.fleet import FleetConfig, FleetMultiplexer, FleetReplayer
+from repro.serve import FleetService, ServiceConfig
+from repro.serve.checkpoint import (FORMAT_VERSION, MAGIC, CheckpointError,
+                                    CheckpointStore, CheckpointVersionError,
+                                    read_checkpoint, write_checkpoint)
+
+N = 4
+STEPS = 8
+
+
+@pytest.fixture(scope="module")
+def world():
+    cfg = get_config("llama-20b-paper")
+    prog = program_from_config(cfg, num_chips=N)
+    store = HistoryStore()
+    eng = DiagnosticEngine(
+        EngineConfig(backend="dense-train", num_ranks=N), store)
+    for seed in range(3):
+        eng.ingest_batch(ClusterSimulator(N, prog, seed=seed).run_batch(3))
+    eng.learn_healthy()
+    return prog, store
+
+
+def _mk_jobs(prog, jobs=4, steps=STEPS):
+    chunk_lists, topo = {}, {}
+    for i in range(jobs):
+        inj = [Injection(kind="network_jitter", factor=3.0, start_step=3)] \
+            if i < jobs // 2 else []
+        sim = ClusterSimulator(N, prog, seed=100 + i, injections=inj)
+        batch = sim.run_batch(steps)
+        jid = f"ck{i:02d}-{'jit' if i < jobs // 2 else 'ok'}"
+        order, uniq, bounds = batch.step_index()
+        chunk_lists[jid] = [batch.take(order[bounds[j]:bounds[j + 1]])
+                            for j in range(uniq.size)]
+        topo[jid] = {"rack": f"r{i // 2}", "switch": f"s{i // 4}"}
+    return chunk_lists, topo
+
+
+def _write_logs(logdir, chunk_lists):
+    for jid, chunks in chunk_lists.items():
+        path = os.path.join(logdir, f"{jid}.fcs")
+        for c in chunks:
+            trace_store.write_trace(c, path, codec="fcs")
+
+
+def _mk_mux(store, topo):
+    return FleetMultiplexer(
+        FleetConfig(watermark_delay=1,
+                    fleet_detectors=["cross_job_failslow"], topology=topo),
+        history=store)
+
+
+def _ecfg():
+    return EngineConfig(backend="dense-train", num_ranks=N)
+
+
+def _oracle(logdir, store, topo, jobs):
+    mux = _mk_mux(store, topo)
+    for jid in jobs:
+        mux.add_job(jid, _ecfg())
+    stats = FleetReplayer(mux).replay_dir(logdir, job_workers=1)
+    out = sorted(mux.finalize(), key=lambda a: (a.ts, a.job_id, a.seq))
+    return [str(fa) for fa in out], stats
+
+
+def _sorted_strs(fas):
+    return [str(fa)
+            for fa in sorted(fas, key=lambda a: (a.ts, a.job_id, a.seq))]
+
+
+def _wait(pred, timeout_s=30.0):
+    deadline = time.monotonic() + timeout_s
+    while not pred():
+        if time.monotonic() > deadline:
+            raise TimeoutError("checkpoint test: condition not reached")
+        time.sleep(0.01)
+
+
+# ---------------------------------------------------------------------- #
+# container
+# ---------------------------------------------------------------------- #
+def test_container_roundtrip_and_atomicity(tmp_path):
+    state = {"a": [1, 2.5, "x"], "nested": {"b": (3, None)},
+             "blob": b"\x00\xff" * 100}
+    path = str(tmp_path / "ckpt-00000001.flc")
+    n = write_checkpoint(path, state)
+    assert os.path.getsize(path) == n
+    assert read_checkpoint(path) == state
+    assert not os.path.exists(path + ".tmp")     # tmp renamed away
+
+    # single-pickle payload preserves identity between shared references
+    shared = ["names"]
+    st2 = {"interner": shared, "batch_ref": shared}
+    p2 = str(tmp_path / "ckpt-00000002.flc")
+    write_checkpoint(p2, st2)
+    back = read_checkpoint(p2)
+    assert back["interner"] is back["batch_ref"]
+
+
+def test_store_generations_and_pruning(tmp_path):
+    cs = CheckpointStore(str(tmp_path), keep=2)
+    for i in range(4):
+        path, gen, _ = cs.save({"gen": i})
+        assert gen == i + 1
+    assert cs.generations() == [3, 4]            # pruned down to keep=2
+    state, path, gen, skipped = cs.load_latest()
+    assert (state["gen"], gen, skipped) == (3, 4, [])
+
+
+def test_empty_store_loads_none(tmp_path):
+    assert CheckpointStore(str(tmp_path)).load_latest() is None
+
+
+@pytest.mark.parametrize("corrupt", ["truncate_header", "truncate_payload",
+                                     "flip_payload", "bad_magic",
+                                     "absurd_length"])
+def test_torn_checkpoints_detected_and_skipped(tmp_path, corrupt):
+    """Every torn/corrupt shape raises a clear CheckpointError on direct
+    read, and load_latest skips back to the previous valid generation
+    (reporting what it passed over) instead of misparsing."""
+    cs = CheckpointStore(str(tmp_path))
+    cs.save({"gen": 1, "payload": list(range(256))})
+    path, gen2, _ = cs.save({"gen": 2, "payload": list(range(256))})
+    blob = bytearray(open(path, "rb").read())
+    if corrupt == "truncate_header":
+        blob = blob[:10]
+    elif corrupt == "truncate_payload":
+        blob = blob[:len(blob) // 2]
+    elif corrupt == "flip_payload":
+        blob[-1] ^= 0xFF                          # CRC catches the flip
+    elif corrupt == "bad_magic":
+        blob[:4] = b"NOPE"
+    elif corrupt == "absurd_length":
+        struct.pack_into("<Q", blob, 8, 1 << 40)
+    with open(path, "wb") as f:
+        f.write(bytes(blob))
+
+    with pytest.raises(CheckpointError):
+        read_checkpoint(path)
+    state, _, gen, skipped = cs.load_latest()
+    assert (state["gen"], gen) == (1, 1)
+    assert len(skipped) == 1 and os.path.basename(path) in skipped[0]
+
+
+def test_crc_mismatch_message_names_the_file(tmp_path):
+    path = str(tmp_path / "ckpt-00000001.flc")
+    write_checkpoint(path, {"x": 1})
+    blob = bytearray(open(path, "rb").read())
+    blob[-1] ^= 0x01
+    with open(path, "wb") as f:
+        f.write(bytes(blob))
+    with pytest.raises(CheckpointError, match="CRC mismatch"):
+        read_checkpoint(path)
+
+
+def test_newer_format_version_refuses_never_skips(tmp_path):
+    """A checkpoint from a NEWER build must refuse loudly — silently
+    skipping back would restore an older view of the world while a
+    perfectly good (but not-understood) snapshot sits on disk."""
+    cs = CheckpointStore(str(tmp_path))
+    cs.save({"gen": 1})
+    payload = b"future-format bytes"
+    newer = os.path.join(str(tmp_path), "ckpt-00000002.flc")
+    with open(newer, "wb") as f:
+        f.write(struct.pack("<4sHHQI", MAGIC, FORMAT_VERSION + 1, 0,
+                            len(payload), zlib.crc32(payload)))
+        f.write(payload)
+    with pytest.raises(CheckpointVersionError, match="newer"):
+        read_checkpoint(newer)
+    with pytest.raises(CheckpointVersionError):
+        cs.load_latest()
+
+
+# ---------------------------------------------------------------------- #
+# service-level restore
+# ---------------------------------------------------------------------- #
+def test_restore_none_without_checkpoint_full_replay(world, tmp_path):
+    """checkpoint_dir configured but empty: restore() returns None and
+    the service falls back to a cold full replay — results unchanged."""
+    prog, store = world
+    chunk_lists, topo = _mk_jobs(prog, jobs=2)
+    logdir = str(tmp_path / "logs")
+    os.makedirs(logdir)
+    _write_logs(logdir, chunk_lists)
+    oracle, ostats = _oracle(logdir, store, topo, chunk_lists)
+
+    got = []
+    svc = FleetService(
+        _mk_mux(store, topo),
+        ServiceConfig(port=None, tail_dir=logdir,
+                      checkpoint_dir=str(tmp_path / "ckpt"),
+                      checkpoint_on_finalize=False,
+                      default_engine=_ecfg()),
+        on_anomaly=lambda fa, t: got.append(fa))
+    assert svc.restore() is None
+    svc.start()
+    _wait(lambda: svc.tailer.stats.events >= ostats.events)
+    svc.finalize()
+    assert _sorted_strs(got) == oracle
+    assert svc.telemetry.value("serve.restore_fallbacks") == 1
+
+
+def test_restore_refuses_worker_kind_mismatch(tmp_path):
+    cs = CheckpointStore(str(tmp_path))
+    cs.save({"worker_kind": "inline", "service": {}, "fleet": {},
+             "jobs": {}, "telemetry": {}, "tail": None})
+    svc = FleetService(
+        FleetMultiplexer(FleetConfig()),
+        ServiceConfig(port=None, worker_kind="process", workers=1,
+                      checkpoint_dir=str(tmp_path)))
+    with pytest.raises(CheckpointError, match="worker_kind"):
+        svc.restore()
+
+
+def test_kill_and_restore_inline_tail_equivalence(world, tmp_path):
+    """The tentpole contract at test scale: checkpoint mid-stream (the
+    watermark holds pending step buffers open), kill abruptly, land the
+    rest of the data while the service is dead, restore a fresh process
+    — the stitched anomaly stream, stats signature, and fleet-tier
+    reclassification set equal an uninterrupted run's, and only the
+    spill suffix was decoded again."""
+    prog, store = world
+    chunk_lists, topo = _mk_jobs(prog)
+    logdir = str(tmp_path / "logs")
+    os.makedirs(logdir)
+    first = {j: c[:len(c) // 2] for j, c in chunk_lists.items()}
+    rest = {j: c[len(c) // 2:] for j, c in chunk_lists.items()}
+    half_events = sum(len(c) for cs in first.values() for c in cs)
+    scfg = ServiceConfig(port=None, tail_dir=logdir, tail_poll_s=0.005,
+                         drain_interval_s=0.01,
+                         checkpoint_dir=str(tmp_path / "ckpt"),
+                         checkpoint_on_finalize=False,
+                         default_engine=_ecfg())
+
+    _write_logs(logdir, first)
+    got1 = []
+    svc1 = FleetService(_mk_mux(store, topo), scfg,
+                        on_anomaly=lambda fa, t: got1.append(fa)).start()
+    _wait(lambda: svc1.tailer.stats.events >= half_events)
+    meta = svc1.checkpoint()
+    svc1.kill()
+    assert meta["generation"] == 1
+    assert 0 < meta["tail_bytes_decoded"]
+    pre = got1[:meta["anomalies_emitted"]]
+    assert len(pre) == meta["anomalies_emitted"]
+
+    _write_logs(logdir, rest)              # lands while the service is dead
+    oracle, ostats = _oracle(logdir, store, topo, chunk_lists)
+    full_bytes = sum(os.path.getsize(os.path.join(logdir, f))
+                     for f in os.listdir(logdir) if f.endswith(".fcs"))
+
+    got2 = []
+    svc2 = FleetService(_mk_mux(store, topo), scfg,
+                        on_anomaly=lambda fa, t: got2.append(fa))
+    meta2 = svc2.restore()
+    assert meta2["generation"] == meta["generation"]
+    assert meta2["skipped"] == []
+    assert meta2["anomalies_emitted"] == meta["anomalies_emitted"]
+    svc2.start()
+    _wait(lambda: svc2.tailer.stats.events >= ostats.events)
+    svc2.finalize()
+
+    assert _sorted_strs(pre + got2) == oracle
+    assert svc2.tailer.stats.events == ostats.events
+    assert dict(sorted(svc2.tailer.stats.per_job.items())) == ostats.per_job
+    # suffix-only replay: every byte decoded exactly once across the two
+    # incarnations, and the restored one decoded strictly less than all
+    assert svc2.tailer.stats.bytes_decoded == full_bytes
+    assert 0 < full_bytes - meta["tail_bytes_decoded"] < full_bytes
+
+
+def test_graceful_finalize_writes_checkpoint(world, tmp_path):
+    """checkpoint_on_finalize (the default): a clean shutdown leaves a
+    restorable generation behind without any explicit checkpoint call."""
+    prog, store = world
+    chunk_lists, topo = _mk_jobs(prog, jobs=2)
+    logdir = str(tmp_path / "logs")
+    os.makedirs(logdir)
+    _write_logs(logdir, chunk_lists)
+    ckptdir = str(tmp_path / "ckpt")
+    svc = FleetService(
+        _mk_mux(store, topo),
+        ServiceConfig(port=None, tail_dir=logdir, checkpoint_dir=ckptdir,
+                      default_engine=_ecfg())).start()
+    _wait(lambda: svc.tailer.stats.events > 0)
+    svc.finalize()
+    assert CheckpointStore(ckptdir).generations() == [1]
+    assert svc.telemetry.value("serve.checkpoints") == 1

@@ -18,7 +18,13 @@ Covered:
   * the daemon's ``live_endpoint`` sink (ships real drains; counted
     drops against a dead service, never an exception);
   * archive per-query byte budgets (``max_bytes`` -> honest truncated
-    prefix) and the HTTP query plane.
+    prefix) and the HTTP query plane;
+  * robustness (ISSUE 10): connection cap rejects cleanly and counted;
+    per-job overload shedding drops counted frames without decoding;
+    the daemon's live sink re-HELLOs (topology + engine) after a
+    service restart, spill staying the source of truth while the
+    service is down; a dead worker process triggers checkpoint-based
+    recovery with duplicate anomalies suppressed.
 """
 import json
 import os
@@ -507,6 +513,206 @@ def test_daemon_live_endpoint_streams_to_service(world):
         assert counters.get("daemon.live_dropped", 0) == 0
     finally:
         svc.finalize()
+
+
+# ---------------------------------------------------------------------- #
+# robustness: connection caps, shedding, restart, worker death
+# ---------------------------------------------------------------------- #
+def test_max_connections_rejected_cleanly(world):
+    prog, store = world
+    svc = FleetService(
+        FleetMultiplexer(FleetConfig(), history=store),
+        ServiceConfig(port=0, max_connections=1,
+                      default_engine=_ecfg())).start()
+    try:
+        cl = LiveClient("127.0.0.1", svc.port)
+        cl.hello("j-keep")
+        deadline = time.time() + 5
+        while time.time() < deadline and "j-keep" not in svc.mux.topology \
+                and not svc.mux.jobs:
+            time.sleep(0.01)
+        # over the cap: the service closes immediately and counts it
+        s = socket.create_connection(("127.0.0.1", svc.port), timeout=5)
+        s.settimeout(5)
+        assert s.recv(1) == b""            # clean server-side close
+        s.close()
+        assert svc.telemetry.value("serve.rejected_connections") == 1
+        # the accepted connection is unharmed: it can still ingest
+        batch = ClusterSimulator(N, prog, seed=5).run_batch(1)
+        cl.send_batch("j-keep", trace_store.encode_batch_bytes(batch))
+        deadline = time.time() + 5
+        while time.time() < deadline and \
+                svc.mux.job("j-keep").store.events_total == 0:
+            time.sleep(0.02)
+        assert svc.mux.job("j-keep").store.events_total == len(batch)
+        cl.close()
+    finally:
+        svc.finalize()
+    assert svc.telemetry.value("serve.dropped_frames") == 0
+
+
+def test_overload_shedding_counted_per_job(world):
+    """Over the per-job inflight cap, frames are dropped WITHOUT
+    decoding and counted per job; under the cap they flow again."""
+    prog, store = world
+    svc = FleetService(
+        FleetMultiplexer(FleetConfig(), history=store),
+        ServiceConfig(port=None, worker_kind="process", workers=1,
+                      max_inflight_frames=4, default_engine=_ecfg()))
+    svc.start()
+    try:
+        batch = ClusterSimulator(N, prog, seed=5).run_batch(1)
+        payload = trace_store.encode_batch_bytes(batch)
+        svc.join_job("shed-j")
+        # pin the inflight depth at the cap: the next frame must shed
+        with svc._reg_lock:
+            svc._inflight["shed-j"] = 4
+        svc.ingest_frame("shed-j", payload)
+        assert svc.telemetry.value("serve.shed_frames", job="shed-j") == 1
+        svc.ingest_frame("shed-j", payload)
+        assert svc.telemetry.value("serve.shed_frames", job="shed-j") == 2
+        with svc._reg_lock:                # backlog drained: flows again
+            svc._inflight["shed-j"] = 0
+        svc.ingest_frame("shed-j", payload)
+        assert svc.telemetry.value("serve.shed_frames", job="shed-j") == 2
+        deadline = time.time() + 10
+        while time.time() < deadline and \
+                svc.telemetry.value("serve.inflight", job="shed-j") > 0:
+            time.sleep(0.02)
+    finally:
+        svc.finalize()
+    # exactly the one accepted frame was ingested
+    assert svc.stats.events == len(batch)
+
+
+def test_live_sink_rehellos_after_service_restart(world):
+    """Kill the service mid-stream: the daemon's sink takes counted
+    drops (its spill stays the source of truth), then the next backoff
+    reconnect re-sends HELLO — a restarted service learns the job's
+    topology again with no daemon-side special case."""
+    prog, store = world
+    svc1 = FleetService(
+        FleetMultiplexer(FleetConfig(), history=store),
+        ServiceConfig(port=0, default_engine=_ecfg())).start()
+    port = svc1.port
+    reg = TelemetryRegistry()
+    sink = LiveBatchSink(f"127.0.0.1:{port}", "dj",
+                         topology={"rack": "r9"}, telemetry=reg,
+                         timeout=2.0, backoff_s=0.05, backoff_max_s=0.05)
+    batch = ClusterSimulator(N, prog, seed=5).run_batch(1)
+    try:
+        assert sink(batch) is True
+        deadline = time.time() + 5
+        while time.time() < deadline and \
+                svc1.mux.topology.get("dj") != {"rack": "r9"}:
+            time.sleep(0.02)
+        assert svc1.mux.topology["dj"] == {"rack": "r9"}
+
+        svc1.kill()                        # crash, not graceful
+        # service down: counted drop, never an exception — the daemon's
+        # spill keeps the authoritative copy of anything dropped here
+        time.sleep(0.1)
+        dropped_any = False
+        for _ in range(20):
+            if sink(batch) is False:
+                dropped_any = True
+                break
+            time.sleep(0.05)
+        assert dropped_any
+
+        svc2 = FleetService(
+            FleetMultiplexer(FleetConfig(), history=store),
+            ServiceConfig(port=port, default_engine=_ecfg())).start()
+        try:
+            # backoff reconnect re-sends HELLO: the fresh service (which
+            # never saw the original registration) learns the topology
+            deadline = time.time() + 10
+            sent = False
+            while time.time() < deadline and not sent:
+                sent = sink(batch)
+                if not sent:
+                    time.sleep(0.05)
+            assert sent
+            deadline = time.time() + 5
+            while time.time() < deadline and \
+                    svc2.mux.topology.get("dj") != {"rack": "r9"}:
+                time.sleep(0.02)
+            assert svc2.mux.topology["dj"] == {"rack": "r9"}
+            deadline = time.time() + 5
+            while time.time() < deadline and \
+                    svc2.mux.job("dj").store.events_total == 0:
+                time.sleep(0.02)
+            assert svc2.mux.job("dj").store.events_total == len(batch)
+        finally:
+            svc2.finalize()
+        counters = reg.snapshot()["counters"]
+        assert counters["daemon.live_reconnects"] >= 1
+        assert counters["daemon.live_dropped"] >= 1
+    finally:
+        sink.close()
+
+
+def test_worker_death_recovers_from_checkpoint(world, tmp_path):
+    """Kill a worker process mid-run: the service rewinds to its newest
+    checkpoint, respawns the pool, replays the tail suffix, suppresses
+    the anomalies it already delivered since the checkpoint — and the
+    complete delivery stream still equals the uninterrupted oracle."""
+    prog, store = world
+    chunk_lists, topo = _mk_jobs(prog)
+    logdir = str(tmp_path / "logs")
+    os.makedirs(logdir)
+    first = {j: c[:len(c) // 2] for j, c in chunk_lists.items()}
+    rest = {j: c[len(c) // 2:] for j, c in chunk_lists.items()}
+    half_events = sum(len(c) for cs in first.values() for c in cs)
+    total_events = sum(len(c) for cs in chunk_lists.values() for c in cs)
+
+    _write_logs(logdir, first)
+    got = []
+    svc = FleetService(
+        _mk_mux(store, topo),
+        ServiceConfig(port=None, tail_dir=logdir, tail_poll_s=0.005,
+                      drain_interval_s=0.01, worker_kind="process",
+                      workers=2, checkpoint_dir=str(tmp_path / "ckpt"),
+                      checkpoint_on_finalize=False,
+                      default_engine=_ecfg()),
+        on_anomaly=lambda fa, t: got.append(fa)).start()
+    try:
+        deadline = time.time() + 30
+        while time.time() < deadline and \
+                svc.tailer.stats.events < half_events:
+            time.sleep(0.01)
+        meta = svc.checkpoint()
+        emitted = meta["anomalies_emitted"]
+
+        _write_logs(logdir, rest)
+        # let post-checkpoint diagnosis flow so the dedup path has
+        # something real to suppress, then kill a worker process
+        deadline = time.time() + 30
+        while time.time() < deadline and len(got) <= emitted:
+            time.sleep(0.01)
+        victim = svc._pool.worker_for(sorted(chunk_lists)[0])
+        svc._pool.kill_worker(victim)
+        deadline = time.time() + 60
+        while time.time() < deadline and \
+                svc.telemetry.value("serve.worker_respawns") < 1:
+            time.sleep(0.05)
+        assert svc.telemetry.value("serve.worker_respawns") >= 1
+        deadline = time.time() + 60
+        while time.time() < deadline and \
+                svc.tailer.stats.events < total_events:
+            time.sleep(0.02)
+    finally:
+        svc.finalize()
+
+    oracle, ostats = _oracle(logdir, store, topo, chunk_lists)
+    assert _sorted_strs(got) == oracle
+    assert svc.tailer.stats.events == ostats.events
+    assert dict(sorted(svc.tailer.stats.per_job.items())) == ostats.per_job
+    # the suppressed duplicates are exactly the post-checkpoint
+    # deliveries the first incarnation already made
+    assert svc.telemetry.value("serve.deduped_anomalies") >= 1
+    assert svc.telemetry.value("serve.recovery_dedup_mismatch") == 0
+    assert svc.telemetry.value("serve.worker_deaths") >= 1
 
 
 # ---------------------------------------------------------------------- #
